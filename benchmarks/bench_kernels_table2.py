@@ -1,0 +1,53 @@
+"""Paper Table 2 analogue: all 15 kernels on the shared wavefront back-end.
+
+Columns: alignments/s and GCUPS (DP cells/s) measured on XLA:CPU for a
+batch of sequence pairs, plus the VMEM working-set the Pallas kernel would
+claim on TPU for the same spec (the resource-utilization analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import batch as core_batch, kernels_zoo
+from .common import emit, kernel_batch, timeit
+
+N, NQ, NR = 16, 128, 128
+
+
+def vmem_bytes(spec, n_pe=128, r=4096):
+    """Working set of the TPU kernel strip (see kernels/wavefront)."""
+    L = spec.n_layers
+    import jax.numpy as jnp
+    sb = jnp.dtype(spec.score_dtype).itemsize
+    cb = int(np.prod(spec.char_shape or (1,))) * \
+        jnp.dtype(spec.char_dtype).itemsize
+    return ((r + 1) * L * sb          # preserved row buffer
+            + 2 * n_pe * L * sb       # wavefront carries
+            + n_pe * cb + r * cb      # query strip + ref stream
+            + n_pe * (n_pe + r - 1))  # tb strip (uint8)
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    n = 8 if quick else N
+    for kid in range(1, 16):
+        name, _, _ = kernels_zoo.KERNELS[kid]
+        spec, params = kernels_zoo.make(kid)
+        qs, rs, ql, rl = kernel_batch(rng, spec, n, NQ, NR)
+        fn = jax.jit(functools.partial(
+            core_batch.align_batch, spec, params,
+            with_traceback=spec.traceback is not None))
+        sec = timeit(fn, qs, rs, ql, rl)
+        aps = n / sec
+        gcups = n * NQ * NR / sec / 1e9
+        emit(f"table2/{kid:02d}_{name}", sec / n,
+             f"aligns_per_s={aps:.0f} gcups={gcups:.3f} "
+             f"vmem_kib={vmem_bytes(spec) / 1024:.0f} "
+             f"n_layers={spec.n_layers}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 3 analogue: throughput scaling in the two parallelism knobs.
+
+* N_PE analogue — wavefront width: throughput vs sequence length (lanes =
+  Q+1 PEs; saturation at the matrix edges mirrors Fig 3A's roll-off).
+* N_B analogue — independent blocks: throughput vs vmap batch width
+  (expected near-perfect scaling, Fig 3's N_B curves).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import batch as core_batch, kernels_zoo
+from .common import emit, kernel_batch, timeit
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    for kid, kname in [(1, "global_linear"), (9, "dtw")]:
+        spec, params = kernels_zoo.make(kid)
+        # N_B scaling (fixed 128x128 pairs)
+        for nb in ([1, 4, 16] if quick else [1, 2, 4, 8, 16, 32]):
+            qs, rs, ql, rl = kernel_batch(rng, spec, nb, 128, 128)
+            fn = jax.jit(functools.partial(core_batch.align_batch, spec,
+                                           params, with_traceback=False))
+            sec = timeit(fn, qs, rs, ql, rl)
+            emit(f"fig3/{kname}/nb_{nb:02d}", sec,
+                 f"aligns_per_s={nb / sec:.0f} "
+                 f"cells_per_s={nb * 128 * 128 / sec:.3e}")
+        # N_PE analogue: wavefront width via sequence length
+        for sl in ([64, 256] if quick else [32, 64, 128, 256, 512]):
+            qs, rs, ql, rl = kernel_batch(rng, spec, 4, sl, sl)
+            fn = jax.jit(functools.partial(core_batch.align_batch, spec,
+                                           params, with_traceback=False))
+            sec = timeit(fn, qs, rs, ql, rl)
+            emit(f"fig3/{kname}/npe_{sl:03d}", sec,
+                 f"cells_per_s={4 * sl * sl / sec:.3e}")
+
+
+if __name__ == "__main__":
+    run()

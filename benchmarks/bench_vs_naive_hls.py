@@ -1,0 +1,59 @@
+"""Paper §7.5 analogue: the optimized back-end vs a directive-light one.
+
+The paper beats the Vitis Genomics Library HLS kernel by 32.6% because its
+back-end encodes more optimization hints.  Our analogue: the wavefront
+(anti-diagonal) engine vs the row-major ``reference`` engine — same spec,
+same XLA compiler, different schedule hints.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import batch as core_batch, kernels_zoo
+from .common import emit, kernel_batch, timeit
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    n = 4
+    spec, params = kernels_zoo.make(3)       # Smith-Waterman, like §7.5
+    for L in ([128] if quick else [128, 256, 512]):
+        qs, rs, ql, rl = kernel_batch(rng, spec, n, L, L)
+        res = {}
+        for engine in ["wavefront", "reference"]:
+            fn = jax.jit(functools.partial(
+                core_batch.align_batch, spec, params, engine_name=engine,
+                with_traceback=False))
+            res[engine] = timeit(fn, qs, rs, ql, rl, iters=3)
+            emit(f"naive_hls/{engine}_{L}", res[engine] / n,
+                 f"aligns_per_s={n / res[engine]:.0f}")
+        gain = (res["reference"] / res["wavefront"] - 1) * 100
+        emit(f"naive_hls/wavefront_gain_{L}", 0.0,
+             f"pct={gain:.1f} (paper: +32.6 vs Vitis library; wavefront "
+             "needs the anti-diagonal to fill the vector unit)")
+
+    # O(n·W) band-packed engine vs the masked full-wavefront engine — the
+    # paper's search-space pruning (§2.2.4) as a schedule, not a mask.
+    spec_b, params_b = kernels_zoo.make(11)
+    qs, rs, ql, rl = kernel_batch(rng, spec_b, n, 256, 256)
+    res_b = {}
+    for engine in ["banded", "wavefront"]:
+        fn = jax.jit(functools.partial(
+            core_batch.align_batch, spec_b, params_b, engine_name=engine,
+            with_traceback=False))
+        res_b[engine] = timeit(fn, qs, rs, ql, rl, iters=3)
+        emit(f"naive_hls/banded_{engine}_256", res_b[engine] / n,
+             f"aligns_per_s={n / res_b[engine]:.0f}")
+    spec = spec_b
+    cells_full = 257 * (2 * 16 + 2)  # lanes x diagonals vs band lanes
+    emit("naive_hls/band_packing_gain", 0.0,
+         f"wall_x={res_b['wavefront'] / res_b['banded']:.2f} "
+         f"lane_work_x={257 / 18:.1f} (CPU wall is scan-step-bound; the "
+         "14x lane-work cut pays on TPU VPU lanes)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing, data, CSV output."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call of a jitted fn (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def kernel_batch(rng, spec, n: int, nq: int, nr: int):
+    """Batch of random inputs matching a kernel spec's alphabet."""
+    import jax.numpy as jnp
+    if spec.char_shape == (5,):
+        from repro.core.kernels_zoo.profile import make_profile
+        qs = np.stack([make_profile(rng, nq) for _ in range(n)])
+        rs = np.stack([make_profile(rng, nr) for _ in range(n)])
+    elif spec.char_shape == (2,):
+        qs = rng.normal(size=(n, nq, 2)).astype(np.float32)
+        rs = rng.normal(size=(n, nr, 2)).astype(np.float32)
+    elif spec.char_dtype == jnp.int32:
+        qs = rng.integers(0, 128, (n, nq)).astype(np.int32)
+        rs = rng.integers(0, 128, (n, nr)).astype(np.int32)
+    else:
+        hi = 20 if spec.name == "protein_local" else 4
+        qs = rng.integers(0, hi, (n, nq)).astype(np.uint8)
+        rs = rng.integers(0, hi, (n, nr)).astype(np.uint8)
+    ql = np.full((n,), nq, np.int32)
+    rl = np.full((n,), nr, np.int32)
+    return (jnp.asarray(qs), jnp.asarray(rs), jnp.asarray(ql),
+            jnp.asarray(rl))

@@ -1,0 +1,90 @@
+"""§Roofline table generator: dryrun JSONL -> markdown rows.
+
+Per (arch x shape x mesh): the three roofline terms (seconds), the
+dominant term, MODEL_FLOPS/HLO_FLOPs useful-work ratio, and the roofline
+fraction = useful compute time / bound term (what the hillclimb maximizes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+from repro import configs
+from repro.launch import roofline as R
+
+
+def load(path: str):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    # keep the last record per cell (later runs supersede)
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def rows(path: str, mesh: str = "16x16"):
+    out = []
+    for rec in load(path):
+        if rec["mesh"] != mesh:
+            continue
+        cfg = configs.get(rec["arch"])
+        shape = configs.SHAPES[rec["shape"]]
+        if rec["status"] == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "skipped": rec["reason"]})
+            continue
+        if rec["status"] != "ok":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "error": rec.get("error", "?")})
+            continue
+        rf = R.from_record(rec, cfg, shape)
+        n_dev = 512 if mesh == "2x16x16" else 256
+        useful_s = rf.model_flops / n_dev / R.PEAK_FLOPS
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "compute_s": rf.compute_s, "memory_s": rf.memory_s,
+            "collective_s": rf.collective_s, "dominant": rf.dominant,
+            "useful_ratio": rf.useful_ratio,
+            "roofline_frac": useful_s / rf.bound_s if rf.bound_s else 0.0,
+            "peak_gib": rec["memory"]["peak_per_device"] / 2 ** 30,
+        })
+    return out
+
+
+def markdown(path: str, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | coll s | dominant | "
+        "useful ratio | roofline frac | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows(path, mesh), key=lambda x: (x["arch"], x["shape"])):
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                         f"{r['error'][:40]} ||||||||")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['peak_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun_baseline.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(markdown(args.inp, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

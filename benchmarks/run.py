@@ -1,0 +1,47 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
+stderr-free stdout comments).  ``--quick`` shrinks sizes for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_kernels_table2, bench_scaling_fig3,
+               bench_vs_handcoded_fig45, bench_vs_software_fig6,
+               bench_vs_naive_hls, bench_tiling)
+
+SUITES = [
+    ("Table 2 (15 kernels)", bench_kernels_table2),
+    ("Fig 3 (N_PE / N_B scaling)", bench_scaling_fig3),
+    ("Fig 4/5 (vs hand-coded)", bench_vs_handcoded_fig45),
+    ("Fig 6 (vs software baseline)", bench_vs_software_fig6),
+    ("S7.5 (vs naive-HLS schedule)", bench_vs_naive_hls),
+    ("Tiling (claim 5)", bench_tiling),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in SUITES:
+        if args.only and args.only not in mod.__name__:
+            continue
+        print(f"# --- {title} ---", flush=True)
+        try:
+            mod.run(quick=args.quick)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

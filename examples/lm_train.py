@@ -1,0 +1,64 @@
+"""End-to-end training driver: a ~100M-class LM, a few hundred steps.
+
+Everything is the production stack scaled to one host: the same config
+system, logical-axis sharding (trivially resolved on 1 device), AdamW,
+cosine schedule, atomic checkpointing with resume, and the synthetic
+Markov token pipeline (cross-entropy falls well below the unigram floor).
+
+Run:   PYTHONPATH=src python examples/lm_train.py            # ~100M, 300 steps
+Quick: PYTHONPATH=src python examples/lm_train.py --preset small --steps 60
+"""
+import argparse
+
+from repro.configs.base import ModelConfig
+from repro.launch.train import train_loop
+from repro.optim import AdamWConfig
+
+PRESETS = {
+    # ~110M params (GPT-2-small class): the assignment's e2e target.
+    "100m": ModelConfig(
+        name="example-lm-100m", family="dense",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+        d_ff=3072, vocab_size=8192,
+        norm="rmsnorm", act="swiglu", positional="rope",
+        tie_embeddings=True,
+        param_dtype="float32", compute_dtype="float32", remat=False),
+    # ~22M: same shape family, minutes on this CPU container.
+    "small": ModelConfig(
+        name="example-lm-22m", family="dense",
+        n_layers=6, d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+        d_ff=1536, vocab_size=8192,
+        norm="rmsnorm", act="swiglu", positional="rope",
+        tie_embeddings=True,
+        param_dtype="float32", compute_dtype="float32", remat=False),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="100m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_train")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    from repro.launch.roofline import param_count
+    print(f"model: {cfg.name} (~{param_count(cfg) / 1e6:.0f}M non-embed "
+          f"params), {args.steps} steps @ batch {args.batch} x seq "
+          f"{args.seq}")
+    losses = []
+    state, metrics = train_loop(
+        cfg, steps=args.steps, batch=args.batch, seq=args.seq, lr=args.lr,
+        ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=10,
+        opt_cfg=AdamWConfig(weight_decay=0.01),
+        on_metrics=lambda s, m: losses.append(float(m["loss"])))
+    if len(losses) >= 2:
+        print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"({'FELL' if losses[-1] < losses[0] - 0.1 else 'check run'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper claim 5: long-read alignment via GACT-style tiling.
+
+A 3 kb noisy PacBio-style read is aligned against its reference through a
+fixed 128x128 device kernel with 48-cell overlap — the same heuristic the
+paper demonstrates on AWS F1, driven host-side over the jitted kernel.
+
+Run:  PYTHONPATH=src python examples/long_read_tiling.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import align, alphabets, kernels_zoo, rescore, tiling
+from repro.core import types as T
+
+
+def main():
+    rng = np.random.default_rng(1)
+    spec, params = kernels_zoo.make(2)          # Gotoh, like GACT
+    ref = alphabets.random_dna(rng, 3000)
+    read = alphabets.mutate(rng, ref, 0.12)
+    q, r = jnp.asarray(read), jnp.asarray(ref)
+    print(f"read {len(q)} bp vs reference {len(r)} bp (12% error)")
+
+    t0 = time.perf_counter()
+    tiled = tiling.tiled_align(spec, params, q, r, tile=128, overlap=48)
+    dt = time.perf_counter() - t0
+    a = T.Alignment(score=0, end_i=len(q), end_j=len(r), start_i=0,
+                    start_j=0, moves=np.asarray(tiled.moves[::-1]),
+                    n_moves=len(tiled.moves))
+    tiled_score = rescore.rescore(spec, params, q, r, a)
+    print(f"tiled:   {tiled.n_tiles} tiles, {dt:.1f}s, "
+          f"score {tiled_score:.0f}")
+
+    full = align(spec, params, q, r, with_traceback=False)
+    print(f"full DP: score {float(full.score):.0f} "
+          f"(tiled/full = {tiled_score / float(full.score):.4f})")
+    assert tiled_score >= 0.98 * float(full.score)
+    print("tiling preserves ≥98% of the DP optimum with O(tile) memory")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: define a brand-new DP kernel in ~20 lines and run it.
+
+This is the paper's core productivity claim (kernels in days, not months):
+the user writes only the PE recurrence + init + traceback FSM — the
+wavefront back-end, banding, batching and traceback machinery are shared.
+
+The kernel below is a *new* one, not in the zoo: global alignment with a
+transition/transversion-aware substitution model (purines A<->G cheap,
+pyrimidines C<->T cheap, cross expensive).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DPKernelSpec, REGION_CORNER, STOP_ORIGIN, align
+from repro.core.kernels_zoo import common as C
+from repro.core.traceback import moves_to_cigar
+from repro.core import alphabets
+
+
+def titv_sub(params, q, r):
+    """Transition (A<->G, C<->T) scores milder than transversion."""
+    is_transition = (q // 2 == r // 2) & (q != r)
+    return jnp.where(q == r, params["match"],
+                     jnp.where(is_transition, params["transition"],
+                               params["transversion"]))
+
+
+spec = DPKernelSpec(
+    name="titv_global", n_layers=1,
+    pe=C.linear_pe(titv_sub),
+    init_row=C.linear_gap_init, init_col=C.linear_gap_init,
+    region=REGION_CORNER,
+    traceback=C.linear_tb(STOP_ORIGIN),
+)
+params = {"match": jnp.int32(2), "transition": jnp.int32(-1),
+          "transversion": jnp.int32(-4), "gap": jnp.int32(-2)}
+
+
+def main():
+    rng = np.random.default_rng(0)
+    ref = alphabets.random_dna(rng, 80)
+    read = alphabets.mutate(rng, ref, 0.15)
+    q, r = jnp.asarray(read), jnp.asarray(ref)
+
+    # Three engines, one spec: oracle, optimized wavefront, Pallas (TPU
+    # kernel, validated here in interpret mode).
+    for engine in ["reference", "wavefront", "pallas_interpret"]:
+        a = align(spec, params, q, r, engine_name=engine)
+        print(f"{engine:18s} score={int(a.score):4d} "
+              f"cigar={moves_to_cigar(a.moves, a.n_moves)[:40]}...")
+    print("\nNew kernel defined in ~20 lines; all back-ends agree.")
+
+
+if __name__ == "__main__":
+    main()

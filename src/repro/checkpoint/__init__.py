@@ -1,0 +1,1 @@
+from .manager import latest_step, restore, restore_latest, save

@@ -1,0 +1,29 @@
+"""rwkv6-3b (Finch) — attention-free SSM, 32L d=2560 d_ff=8960 v=65536.
+
+[arXiv:2404.05892] Data-dependent decay WKV6 recurrence, head_dim=64
+(40 heads), squared-ReLU channel mix, LayerNorm.  Pure state-space ->
+runs long_500k.  The WKV6 sequence scan is the 1-D specialization of the
+paper's chunked wavefront: block-local attention-like compute + carried
+(head, k, v) state, exactly the preserved-row-buffer discipline.
+"""
+from .base import ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40, head_dim=64,
+    d_ff=8960, vocab_size=65536,
+    norm="layernorm", act="relu2", positional="none",
+    pattern=("rwkv6",),
+    pad_heads_to=48,   # 40 heads -> 48 so the WKV state shards 16-way
+)
+
+REDUCED = ModelConfig(
+    name="rwkv6-3b-reduced", family="ssm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=256,
+    norm="layernorm", act="relu2", positional="none",
+    pattern=("rwkv6",),
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)
+
+register(CONFIG, REDUCED)

@@ -1,0 +1,31 @@
+"""whisper-medium — audio enc-dec, 24+24L d=1024 16H (MHA) d_ff=4096 v=51865.
+
+[arXiv:2212.04356] The conv frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings (batch, seq, d).
+Learned positional embeddings, GELU MLP, pre-LayerNorm.  Decoder is
+autoregressive -> decode_32k runs (self-cache + cross-attention to encoder
+states); vocab padded 51865 -> 51872 for 16-way TP.
+"""
+from .base import ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=4096, vocab_size=51865,
+    norm="layernorm", act="gelu", positional="learned",
+    enc_dec=True, n_enc_layers=24, frontend="audio",
+    pad_vocab_to=51_872,   # 51865 -> /16 divisible
+    max_seq=32_768,
+)
+
+REDUCED = ModelConfig(
+    name="whisper-medium-reduced", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=256,
+    norm="layernorm", act="gelu", positional="learned",
+    enc_dec=True, n_enc_layers=2, frontend="audio",
+    max_seq=128,
+    param_dtype="float32", compute_dtype="float32", remat=False,
+)
+
+register(CONFIG, REDUCED)

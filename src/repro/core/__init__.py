@@ -1,0 +1,21 @@
+"""repro.core — the DP-HLS front-end/back-end reproduced in JAX.
+
+Front-end: DPKernelSpec (+ the kernels_zoo registry of all 15 Table-1
+kernels).  Back-ends: reference (oracle), wavefront (anti-diagonal scan),
+banded wavefront, and the Pallas TPU kernel in repro.kernels.wavefront.
+"""
+from .types import (Alignment, DPKernelSpec, DPResult, TracebackSpec,
+                    MOVE_DIAG, MOVE_END, MOVE_LEFT, MOVE_UP,
+                    REGION_ALL, REGION_CORNER, REGION_LAST_ROW,
+                    REGION_LAST_ROW_COL, STOP_EDGE, STOP_ORIGIN,
+                    STOP_PTR_END, STOP_TOP_ROW)
+from .api import align, fill, score_only
+from . import alphabets, kernels_zoo, traceback
+
+__all__ = [
+    "Alignment", "DPKernelSpec", "DPResult", "TracebackSpec",
+    "MOVE_DIAG", "MOVE_END", "MOVE_LEFT", "MOVE_UP",
+    "REGION_ALL", "REGION_CORNER", "REGION_LAST_ROW", "REGION_LAST_ROW_COL",
+    "STOP_EDGE", "STOP_ORIGIN", "STOP_PTR_END", "STOP_TOP_ROW",
+    "align", "fill", "score_only", "alphabets", "kernels_zoo", "traceback",
+]

@@ -1,0 +1,56 @@
+"""Public alignment API: spec + params + sequences -> Alignment.
+
+Engine selection mirrors the paper's flow: the 'reference' engine is the
+C-simulation oracle, 'wavefront' is the optimized back-end, and 'pallas'
+(see repro.kernels.wavefront) is the TPU kernel version of the same
+back-end schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import banded, engine, reference, traceback as tb_mod
+from . import types as T
+
+ENGINES = {
+    "reference": reference.run,
+    "wavefront": engine.run,
+    "banded": banded.run,         # O(n*W) band-packed lanes, score-only
+}
+
+
+def _get_engine(name: str):
+    if name in ENGINES:
+        return ENGINES[name]
+    if name in ("pallas", "pallas_interpret"):
+        from repro.kernels.wavefront import ops as wops  # lazy import
+        return functools.partial(wops.run, interpret=(name == "pallas_interpret"))
+    raise ValueError(f"unknown engine {name!r}; have {sorted(ENGINES)} + pallas")
+
+
+def align(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
+          engine_name: str = "wavefront", with_traceback: bool = True) -> T.Alignment:
+    """Run matrix fill + (optional) traceback for one sequence pair.
+
+    Shapes are static (pad and pass ``q_len``/``r_len`` for shorter inputs);
+    jit-compatible and vmap-able over (query, ref, q_len, r_len).
+    """
+    res = _get_engine(engine_name)(spec, params, query, ref, q_len, r_len)
+    if with_traceback and spec.traceback is not None:
+        max_len = query.shape[0] + ref.shape[0] + 1
+        return tb_mod.run(spec, res, max_len)
+    return T.Alignment(score=res.score, end_i=res.end_i, end_j=res.end_j)
+
+
+def score_only(spec, params, query, ref, q_len=None, r_len=None,
+               engine_name: str = "wavefront"):
+    return align(spec, params, query, ref, q_len, r_len, engine_name,
+                 with_traceback=False).score
+
+
+def fill(spec, params, query, ref, q_len=None, r_len=None,
+         engine_name: str = "wavefront") -> T.DPResult:
+    return _get_engine(engine_name)(spec, params, query, ref, q_len, r_len)

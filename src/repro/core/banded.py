@@ -1,0 +1,102 @@
+"""Band-packed wavefront engine — O(n·W) work for banded kernels (#11-13).
+
+The generic wavefront engine computes full Q+1-lane anti-diagonals and
+masks cells outside the band — correct but O(n²) work.  Here lanes hold
+only the band: on anti-diagonal d, cells satisfy |2i − d| ≤ W, i.e. i ∈
+[⌈(d−W)/2⌉, ⌊(d+W)/2⌋] — at most W+1 cells.  Lane k stores i = base(d)+k
+with base(d) = max(ceil((d−W)/2), 0); between consecutive diagonals the
+base advances by 0 or 1, so the up/diag/left neighbors sit at
+parity-dependent lane offsets — the classic banded-systolic addressing
+(paper §2.2.4, 'cycled systolic array' in the FPGA literature).
+
+Score-only (banded traceback kernels re-run the generic engine when a
+path is required; the paper's own #12 is likewise no-traceback).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+
+
+def run(spec: T.DPKernelSpec, params, query, ref, q_len=None,
+        r_len=None) -> T.DPResult:
+    assert spec.band is not None, "banded engine requires spec.band"
+    W = int(spec.band)
+    Q, R = query.shape[0], ref.shape[0]
+    L = spec.n_layers
+    dt = spec.score_dtype
+    sent = spec.sentinel()
+    q_len = jnp.asarray(Q if q_len is None else q_len, jnp.int32)
+    r_len = jnp.asarray(R if r_len is None else r_len, jnp.int32)
+
+    lanes = W + 2                       # band + slack for the shift
+    k_idx = jnp.arange(lanes, dtype=jnp.int32)
+
+    j_all = jnp.arange(R + 1, dtype=jnp.int32)
+    i_all = jnp.arange(Q + 1, dtype=jnp.int32)
+    row0 = jnp.asarray(spec.init_row(params, j_all), dt).reshape(R + 1, L)
+    col0 = jnp.asarray(spec.init_col(params, i_all), dt).reshape(Q + 1, L)
+
+    cd = spec.char_shape
+    zero_char = jnp.zeros(cd, spec.char_dtype)
+
+    def base(d):
+        return jnp.maximum((d - W + 1) // 2, 0)
+
+    vpe = jax.vmap(spec.pe, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))
+
+    def body(carry, d):
+        prev2, prev, best, bi, bj = carry
+        b = base(d)
+        b1 = base(d - 1)     # base of prev diagonal
+        b2 = base(d - 2)
+        i = b + k_idx                       # row per lane
+        j = d - i
+        # neighbor lanes: cell (i-1, j-1) lives on diag d-2 at lane i-1-b2;
+        # (i-1, j) on diag d-1 at lane i-1-b1; (i, j-1) on diag d-1, lane i-b1
+        def take(buf, lane):
+            lane = jnp.clip(lane, 0, lanes - 1)
+            v = jnp.take(buf, lane, axis=0)
+            ok = (lane >= 0) & (lane <= lanes - 1)
+            return jnp.where(ok[:, None], v, sent)
+        diag_v = take(prev2, i - 1 - b2)
+        up_v = take(prev, i - 1 - b1)
+        left_v = take(prev, i - b1)
+        # boundary cells come from init row/col
+        diag_v = jnp.where((i == 1)[:, None],
+                           row0[jnp.clip(j - 1, 0, R)], diag_v)
+        diag_v = jnp.where((j == 1)[:, None],
+                           col0[jnp.clip(i - 1, 0, Q)], diag_v)
+        up_v = jnp.where((i == 1)[:, None], row0[jnp.clip(j, 0, R)], up_v)
+        left_v = jnp.where((j == 1)[:, None], col0[jnp.clip(i, 0, Q)],
+                           left_v)
+
+        q_ch = jnp.take(query, jnp.clip(i - 1, 0, Q - 1), axis=0)
+        r_ch = jnp.take(ref, jnp.clip(j - 1, 0, R - 1), axis=0)
+        scores, _ = vpe(params, q_ch, r_ch, diag_v, up_v, left_v, i, j)
+        scores = jnp.asarray(scores, dt).reshape(lanes, L)
+        valid = (i >= 1) & (j >= 1) & (i <= q_len) & (j <= r_len) & \
+            (jnp.abs(i - j) <= W)
+        newbuf = jnp.where(valid[:, None], scores, sent)
+
+        from .spec_utils import region_mask
+        rmask = region_mask(spec, i, j, q_len, r_len)
+        cand = jnp.where(rmask, newbuf[:, spec.primary_layer], sent)
+        lane_best = spec.reduce_best(cand)
+        lane_arg = spec.arg_best(cand).astype(jnp.int32)
+        upd = spec.better(lane_best, best)
+        best = jnp.where(upd, lane_best, best)
+        bi = jnp.where(upd, b + lane_arg, bi)
+        bj = jnp.where(upd, d - (b + lane_arg), bj)
+        return (prev, newbuf, best, bi, bj), None
+
+    # d=0: only cell (0,0), at lane 0 (base(0)=0)
+    buf_d0 = jnp.full((lanes, L), sent, dt).at[0].set(row0[0])
+    buf_dm1 = jnp.full((lanes, L), sent, dt)
+    carry0 = (buf_dm1, buf_d0, sent, jnp.int32(0), jnp.int32(0))
+    ds = jnp.arange(1, Q + R + 1, dtype=jnp.int32)
+    (_, _, best, bi, bj), _ = jax.lax.scan(body, carry0, ds)
+    return T.DPResult(score=best, end_i=bi, end_j=bj, tb=None,
+                      tb_layout="diag")

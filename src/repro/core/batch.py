@@ -1,0 +1,57 @@
+"""Outer-loop parallelism — the N_B / N_K analogue (paper §5.3).
+
+``align_batch`` vmaps one kernel over many sequence pairs (N_B blocks in one
+device); ``make_sharded_aligner`` shard_maps the batch over the mesh 'data'
+axis (N_K independent channels).  Heterogeneous kernels can be linked by
+building several sharded aligners over the same mesh — the OpenCL-arbiter
+role is played by serve/alignment_service.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import api
+from . import types as T
+
+
+def align_batch(spec: T.DPKernelSpec, params, queries, refs,
+                q_lens=None, r_lens=None, engine_name: str = "wavefront",
+                with_traceback: bool = True):
+    """vmap over the leading (pair) axis.  queries: (N, Lq, *char), refs:
+    (N, Lr, *char); q_lens/r_lens: (N,) effective lengths (None = full)."""
+    n = queries.shape[0]
+    if q_lens is None:
+        q_lens = jnp.full((n,), queries.shape[1], jnp.int32)
+    if r_lens is None:
+        r_lens = jnp.full((n,), refs.shape[1], jnp.int32)
+    fn = functools.partial(api.align, spec, params, engine_name=engine_name,
+                           with_traceback=with_traceback)
+    return jax.vmap(fn)(queries, refs, q_lens, r_lens)
+
+
+def make_sharded_aligner(spec: T.DPKernelSpec, mesh, axis: str = "data",
+                         engine_name: str = "wavefront",
+                         with_traceback: bool = True):
+    """Return a jitted aligner whose batch axis is sharded over ``axis``.
+
+    The global batch must divide the axis size; each device group runs an
+    independent channel (N_K) of vmapped blocks (N_B).
+    """
+    batch_sharding = NamedSharding(mesh, P(axis))
+    repl = NamedSharding(mesh, P())
+
+    @functools.partial(jax.jit,
+                       in_shardings=(repl, batch_sharding, batch_sharding,
+                                     batch_sharding, batch_sharding),
+                       out_shardings=batch_sharding)
+    def aligner(params, queries, refs, q_lens, r_lens):
+        return align_batch(spec, params, queries, refs, q_lens, r_lens,
+                           engine_name=engine_name,
+                           with_traceback=with_traceback)
+
+    return aligner

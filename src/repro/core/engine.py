@@ -1,0 +1,108 @@
+"""Wavefront (anti-diagonal) back-end engine — pure JAX.
+
+This is the JAX analogue of the DP-HLS back-end (§5.1):
+
+  * the scan over anti-diagonals is the ``#pragma HLS PIPELINE`` wavefront
+    loop (one scan step per wavefront),
+  * the lane dimension (vector of Q+1 cells) is the unrolled PE array
+    (``#pragma HLS UNROLL``) — on TPU these become VPU lanes,
+  * the two carried diagonal buffers are the fully-partitioned DP memory
+    buffers (optimization (e)),
+  * the reference sequence *streams* through the lane vector one position
+    per wavefront, exactly like characters streaming through the systolic
+    array (optimizations (c)/(d)),
+  * traceback pointers are emitted one contiguous row per wavefront — the
+    address-coalesced traceback memory of §5.2,
+  * the masked running best + final reduction is §5.2's per-PE local max
+    and reduction tree.
+
+The user-facing surface is only ``spec.pe`` / ``spec.init_*`` — the engine
+body never changes per kernel (the paper's front-end/back-end separation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+from .spec_utils import band_mask, region_mask
+
+
+def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None) -> T.DPResult:
+    Q = query.shape[0]
+    R = ref.shape[0]
+    L = spec.n_layers
+    dt = spec.score_dtype
+    sent = spec.sentinel()
+    q_len = jnp.asarray(Q if q_len is None else q_len, jnp.int32)
+    r_len = jnp.asarray(R if r_len is None else r_len, jnp.int32)
+    with_tb = spec.traceback is not None
+
+    lanes = Q + 1
+    i_idx = jnp.arange(lanes, dtype=jnp.int32)
+
+    # Boundary scores (front-end step 2).
+    row0 = jnp.asarray(spec.init_row(params, jnp.arange(R + 1, dtype=jnp.int32)),
+                       dt).reshape(R + 1, L)
+    col0 = jnp.asarray(spec.init_col(params, i_idx), dt).reshape(lanes, L)
+    col0 = jnp.where((i_idx[:, None] <= q_len) & band_mask(spec, i_idx, 0)[:, None],
+                     col0, sent)
+
+    # Lane-resident query characters: lane i holds q[i-1] (lane 0 is the
+    # boundary row).  Mirrors each PE latching its query base (§5.1).
+    q_lane = jnp.concatenate([query[:1], query], axis=0)  # lane 0 value unused
+
+    # Reference stream: r_diag[i] at diagonal d holds ref[d-1-i].
+    cd = spec.char_shape
+    r_diag0 = jnp.zeros((lanes,) + cd, spec.char_dtype)
+
+    vpe = jax.vmap(spec.pe, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))
+
+    def body(carry, d):
+        prev2, prev, r_stream, best, bi, bj = carry
+        # stream one reference char into lane 0
+        new_char = jax.lax.dynamic_index_in_dim(
+            ref, jnp.clip(d - 1, 0, R - 1), axis=0, keepdims=False)
+        r_stream = jnp.concatenate([new_char[None], r_stream[:-1]], axis=0)
+
+        j = d - i_idx  # column per lane
+        diag_v = jnp.concatenate([jnp.full((1, L), sent, dt), prev2[:-1]], axis=0)
+        up_v = jnp.concatenate([jnp.full((1, L), sent, dt), prev[:-1]], axis=0)
+        left_v = prev
+
+        scores, ptr = vpe(params, q_lane, r_stream, diag_v, up_v, left_v, i_idx, j)
+        scores = jnp.asarray(scores, dt).reshape(lanes, L)
+        ptr = jnp.asarray(ptr, jnp.uint8).reshape(lanes)
+
+        interior = (i_idx >= 1) & (j >= 1) & (i_idx <= q_len) & (j <= r_len)
+        valid = interior & band_mask(spec, i_idx, j)
+        newbuf = jnp.where(valid[:, None], scores, sent)
+        # boundary row (lane 0) and boundary column (lane i == d)
+        row_b = jax.lax.dynamic_index_in_dim(row0, jnp.clip(d, 0, R), 0, keepdims=False)
+        on_row0 = (i_idx == 0) & (d <= r_len) & band_mask(spec, 0, d)
+        on_col0 = (i_idx == d) & (d <= q_len)
+        newbuf = jnp.where(on_row0[:, None], row_b[None, :], newbuf)
+        newbuf = jnp.where(on_col0[:, None], col0, newbuf)
+
+        # §5.2 local-max bookkeeping over the objective region.
+        rmask = region_mask(spec, i_idx, j, q_len, r_len)
+        cand = jnp.where(rmask, newbuf[:, spec.primary_layer], sent)
+        lane_best = spec.reduce_best(cand)
+        lane_arg = spec.arg_best(cand).astype(jnp.int32)
+        upd = spec.better(lane_best, best)
+        best = jnp.where(upd, lane_best, best)
+        bi = jnp.where(upd, lane_arg, bi)
+        bj = jnp.where(upd, d - lane_arg, bj)
+
+        tb_row = jnp.where(valid, ptr, jnp.uint8(0)) if with_tb else None
+        return (prev, newbuf, r_stream, best, bi, bj), tb_row
+
+    # d = 0 buffer: only lane 0 (cell (0,0)) is defined.
+    buf_d0 = jnp.full((lanes, L), sent, dt)
+    buf_d0 = buf_d0.at[0].set(jnp.where(band_mask(spec, 0, 0), row0[0], sent))
+    buf_dm1 = jnp.full((lanes, L), sent, dt)
+
+    carry0 = (buf_dm1, buf_d0, r_diag0, sent, jnp.int32(0), jnp.int32(0))
+    ds = jnp.arange(1, Q + R + 1, dtype=jnp.int32)
+    (_, _, _, best, bi, bj), tb = jax.lax.scan(body, carry0, ds)
+    return T.DPResult(score=best, end_i=bi, end_j=bj, tb=tb, tb_layout="diag")

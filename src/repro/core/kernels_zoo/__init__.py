@@ -1,0 +1,37 @@
+"""The 15 Table-1 DP kernels, each a declarative spec on the shared back-end.
+
+Registry keys match the paper's '#' indices.
+"""
+from __future__ import annotations
+
+from . import dna_linear, dna_affine, dna_two_piece, dtw, viterbi, profile, protein
+
+# kernel_id -> (make_spec(**kw), default_params())
+KERNELS = {
+    1:  ("global_linear",          dna_linear.global_linear,        dna_linear.default_params),
+    2:  ("global_affine",          dna_affine.global_affine,        dna_affine.default_params),
+    3:  ("local_linear",           dna_linear.local_linear,         dna_linear.default_params),
+    4:  ("local_affine",           dna_affine.local_affine,         dna_affine.default_params),
+    5:  ("global_two_piece",       dna_two_piece.global_two_piece,  dna_two_piece.default_params),
+    6:  ("overlap",                dna_linear.overlap,              dna_linear.default_params),
+    7:  ("semiglobal",             dna_linear.semiglobal,           dna_linear.default_params),
+    8:  ("profile",                profile.profile,                 profile.default_params),
+    9:  ("dtw",                    dtw.dtw,                         dtw.default_dtw_params),
+    10: ("viterbi_pairhmm",        viterbi.viterbi,                 viterbi.default_params),
+    11: ("banded_global_linear",   dna_linear.banded_global_linear, dna_linear.default_params),
+    12: ("banded_local_affine",    dna_affine.banded_local_affine,  dna_affine.default_params),
+    13: ("banded_global_two_piece", dna_two_piece.banded_global_two_piece, dna_two_piece.default_params),
+    14: ("sdtw",                   dtw.sdtw,                        dtw.default_sdtw_params),
+    15: ("protein_local",          protein.protein_local,           protein.default_params),
+}
+
+BY_NAME = {name: (mk, dp) for (name, mk, dp) in KERNELS.values()}
+
+
+def make(kernel, **kw):
+    """kernel: paper index (1-15) or name -> (spec, default_params)."""
+    if isinstance(kernel, int):
+        name, mk, dp = KERNELS[kernel]
+    else:
+        mk, dp = BY_NAME[kernel]
+    return mk(**kw), dp()

@@ -1,0 +1,216 @@
+"""Shared PE-function and traceback-FSM builders for the kernel zoo.
+
+Each Table-1 kernel is a tiny declarative module on top of these builders —
+the JAX analogue of the paper's Listings 1-7.  A user adding a new kernel
+writes only: a substitution function, parameter defaults, and (rarely) a
+custom FSM; the back-end engines never change.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import types as T
+
+# Linear-gap pointer encoding (2 bits, paper front-end step 1.5).
+P_END, P_DIAG, P_UP, P_LEFT = 0, 1, 2, 3
+
+# Affine pointer byte: bits 0-1 = H source, bit 2 = I-extend, bit 3 = D-extend
+# (4 bits, as the paper notes for kernel #2).  END must be 0 so that the
+# never-written boundary/invalid cells read back as path terminators.
+A_END, A_DIAG, A_UP, A_LEFT = 0, 1, 2, 3
+# Two-piece pointer byte: bits 0-2 = H source, bits 3-6 = I1/D1/I2/D2 extend
+# (7 bits, as the paper notes for kernels #5/#13).
+TP_END, TP_DIAG, TP_UP1, TP_LEFT1, TP_UP2, TP_LEFT2 = 0, 1, 2, 3, 4, 5
+
+ST_MM, ST_INS, ST_DEL, ST_INS2, ST_DEL2 = 0, 1, 2, 3, 4
+
+
+# ---------------------------------------------------------------------------
+# Linear gap (N_LAYERS = 1)
+# ---------------------------------------------------------------------------
+def linear_pe(sub_fn, local: bool = False):
+    """Listing 5/6 analogue: H = best(diag+sub, up+gap, left+gap) [, 0]."""
+    def pe(params, q, r, diag, up, left, i, j):
+        gap = params["gap"]
+        m = diag[0] + sub_fn(params, q, r)
+        d = up[0] + gap
+        ins = left[0] + gap
+        best = m
+        ptr = jnp.int32(P_DIAG)
+        ptr = jnp.where(d > best, P_UP, ptr)
+        best = jnp.maximum(best, d)
+        ptr = jnp.where(ins > best, P_LEFT, ptr)
+        best = jnp.maximum(best, ins)
+        if local:
+            ptr = jnp.where(best <= 0, P_END, ptr)
+            best = jnp.maximum(best, 0)
+        return best[None], ptr
+    return pe
+
+
+def linear_fsm(state, ptr):
+    move = jnp.where(ptr == P_END, T.MOVE_END,
+                     jnp.where(ptr == P_DIAG, T.MOVE_DIAG,
+                               jnp.where(ptr == P_UP, T.MOVE_UP, T.MOVE_LEFT)))
+    return move, state
+
+
+def linear_tb(stop: str) -> T.TracebackSpec:
+    return T.TracebackSpec(n_states=1, fsm=linear_fsm, stop=stop)
+
+
+# ---------------------------------------------------------------------------
+# Affine gap, Gotoh (N_LAYERS = 3: H, I, D)
+# ---------------------------------------------------------------------------
+def affine_pe(sub_fn, local: bool = False):
+    def pe(params, q, r, diag, up, left, i, j):
+        go, ge = params["gap_open"], params["gap_extend"]
+        ins_open = left[0] + go
+        ins_ext = left[1] + ge
+        ins = jnp.maximum(ins_open, ins_ext)
+        i_ext_bit = (ins_ext > ins_open).astype(jnp.int32)
+        del_open = up[0] + go
+        del_ext = up[2] + ge
+        dele = jnp.maximum(del_open, del_ext)
+        d_ext_bit = (del_ext > del_open).astype(jnp.int32)
+        m = diag[0] + sub_fn(params, q, r)
+        h = m
+        src = jnp.int32(A_DIAG)
+        src = jnp.where(dele > h, A_UP, src)
+        h = jnp.maximum(h, dele)
+        src = jnp.where(ins > h, A_LEFT, src)
+        h = jnp.maximum(h, ins)
+        if local:
+            src = jnp.where(h <= 0, A_END, src)
+            h = jnp.maximum(h, 0)
+        ptr = src | (i_ext_bit << 2) | (d_ext_bit << 3)
+        return jnp.stack([h, ins, dele]), ptr
+    return pe
+
+
+def affine_fsm(state, ptr):
+    src = ptr & 3
+    i_ext = (ptr >> 2) & 1
+    d_ext = (ptr >> 3) & 1
+    # state MM: follow H source; state INS/DEL: keep consuming the gap.
+    going_up = jnp.where(state == ST_MM, src == A_UP, state == ST_DEL)
+    going_left = jnp.where(state == ST_MM, src == A_LEFT, state == ST_INS)
+    ended = (state == ST_MM) & (src == A_END)
+    move = jnp.where(ended, T.MOVE_END,
+                     jnp.where(going_up, T.MOVE_UP,
+                               jnp.where(going_left, T.MOVE_LEFT, T.MOVE_DIAG)))
+    nstate = jnp.where(going_up & (d_ext == 1), ST_DEL,
+                       jnp.where(going_left & (i_ext == 1), ST_INS, ST_MM))
+    return move, nstate
+
+
+def affine_tb(stop: str) -> T.TracebackSpec:
+    return T.TracebackSpec(n_states=3, fsm=affine_fsm, stop=stop)
+
+
+def affine_init_row(params, j):
+    """H/I follow the gap cost open+(k-1)*ext; D unreachable in row 0."""
+    go, ge = params["gap_open"], params["gap_extend"]
+    cost = jnp.where(j == 0, 0, go + (j - 1) * ge)
+    dead = jnp.full_like(cost, -(1 << 30))
+    return jnp.stack([cost, cost, dead], axis=-1)
+
+
+def affine_init_col(params, i):
+    go, ge = params["gap_open"], params["gap_extend"]
+    cost = jnp.where(i == 0, 0, go + (i - 1) * ge)
+    dead = jnp.full_like(cost, -(1 << 30))
+    return jnp.stack([cost, dead, cost], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Two-piece affine, minimap2-style (N_LAYERS = 5: H, I1, D1, I2, D2)
+# ---------------------------------------------------------------------------
+def two_piece_pe(sub_fn):
+    def pe(params, q, r, diag, up, left, i, j):
+        go1, ge1 = params["gap_open"], params["gap_extend"]
+        go2, ge2 = params["gap_open2"], params["gap_extend2"]
+
+        def gap_layer(prev_h, prev_g, go, ge):
+            opn, ext = prev_h + go, prev_g + ge
+            return jnp.maximum(opn, ext), (ext > opn).astype(jnp.int32)
+
+        i1, i1e = gap_layer(left[0], left[1], go1, ge1)
+        d1, d1e = gap_layer(up[0], up[2], go1, ge1)
+        i2, i2e = gap_layer(left[0], left[3], go2, ge2)
+        d2, d2e = gap_layer(up[0], up[4], go2, ge2)
+        m = diag[0] + sub_fn(params, q, r)
+        h, src = m, jnp.int32(TP_DIAG)
+        for cand, code in ((d1, TP_UP1), (i1, TP_LEFT1), (d2, TP_UP2), (i2, TP_LEFT2)):
+            src = jnp.where(cand > h, code, src)
+            h = jnp.maximum(h, cand)
+        ptr = src | (i1e << 3) | (d1e << 4) | (i2e << 5) | (d2e << 6)
+        return jnp.stack([h, i1, d1, i2, d2]), ptr
+    return pe
+
+
+def two_piece_fsm(state, ptr):
+    src = ptr & 7
+    i1e, d1e = (ptr >> 3) & 1, (ptr >> 4) & 1
+    i2e, d2e = (ptr >> 5) & 1, (ptr >> 6) & 1
+    in_mm = state == ST_MM
+    up1 = jnp.where(in_mm, src == TP_UP1, state == ST_DEL)
+    left1 = jnp.where(in_mm, src == TP_LEFT1, state == ST_INS)
+    up2 = jnp.where(in_mm, src == TP_UP2, state == ST_DEL2)
+    left2 = jnp.where(in_mm, src == TP_LEFT2, state == ST_INS2)
+    ended = in_mm & (src == TP_END)
+    going_up = up1 | up2
+    going_left = left1 | left2
+    move = jnp.where(ended, T.MOVE_END,
+                     jnp.where(going_up, T.MOVE_UP,
+                               jnp.where(going_left, T.MOVE_LEFT, T.MOVE_DIAG)))
+    nstate = jnp.where(up1 & (d1e == 1), ST_DEL,
+             jnp.where(left1 & (i1e == 1), ST_INS,
+             jnp.where(up2 & (d2e == 1), ST_DEL2,
+             jnp.where(left2 & (i2e == 1), ST_INS2, ST_MM))))
+    return move, nstate
+
+
+def two_piece_tb(stop: str) -> T.TracebackSpec:
+    return T.TracebackSpec(n_states=5, fsm=two_piece_fsm, stop=stop)
+
+
+def two_piece_init_row(params, j):
+    go1, ge1 = params["gap_open"], params["gap_extend"]
+    go2, ge2 = params["gap_open2"], params["gap_extend2"]
+    c1 = jnp.where(j == 0, 0, go1 + (j - 1) * ge1)
+    c2 = jnp.where(j == 0, 0, go2 + (j - 1) * ge2)
+    h = jnp.maximum(c1, c2)
+    dead = jnp.full_like(h, -(1 << 30))
+    return jnp.stack([h, c1, dead, c2, dead], axis=-1)
+
+
+def two_piece_init_col(params, i):
+    go1, ge1 = params["gap_open"], params["gap_extend"]
+    go2, ge2 = params["gap_open2"], params["gap_extend2"]
+    c1 = jnp.where(i == 0, 0, go1 + (i - 1) * ge1)
+    c2 = jnp.where(i == 0, 0, go2 + (i - 1) * ge2)
+    h = jnp.maximum(c1, c2)
+    dead = jnp.full_like(h, -(1 << 30))
+    return jnp.stack([h, dead, c1, dead, c2], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Substitution functions (front-end step 1.3, Listing 2)
+# ---------------------------------------------------------------------------
+def dna_sub(params, q, r):
+    return jnp.where(q == r, params["match"], params["mismatch"])
+
+
+def matrix_sub(params, q, r):
+    return params["sub"][q.astype(jnp.int32), r.astype(jnp.int32)]
+
+
+def zeros_init(n_layers):
+    def init(params, k):
+        return jnp.zeros(jnp.shape(k) + (n_layers,), jnp.int32)
+    return init
+
+
+def linear_gap_init(params, k):
+    return (params["gap"] * k)[..., None]

@@ -1,0 +1,50 @@
+"""Kernels #2 (global affine / Gotoh), #4 (local affine / SWG),
+#12 (banded local affine, no traceback) — affine gap penalty, N_LAYERS=3.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import types as T
+from . import common as C
+
+
+def default_params(match=2, mismatch=-3, gap_open=-5, gap_extend=-1):
+    return {"match": jnp.int32(match), "mismatch": jnp.int32(mismatch),
+            "gap_open": jnp.int32(gap_open), "gap_extend": jnp.int32(gap_extend)}
+
+
+def global_affine(**kw) -> T.DPKernelSpec:
+    """#2 Gotoh."""
+    return T.DPKernelSpec(
+        name="global_affine", n_layers=3,
+        pe=C.affine_pe(C.dna_sub),
+        init_row=C.affine_init_row, init_col=C.affine_init_col,
+        region=T.REGION_CORNER,
+        traceback=C.affine_tb(T.STOP_ORIGIN), **kw)
+
+
+def _local_zero_init(params, k):
+    z = jnp.zeros_like(k)
+    dead = jnp.full_like(k, -(1 << 30))
+    return jnp.stack([z, dead, dead], axis=-1)
+
+
+def local_affine(**kw) -> T.DPKernelSpec:
+    """#4 Smith-Waterman-Gotoh."""
+    return T.DPKernelSpec(
+        name="local_affine", n_layers=3,
+        pe=C.affine_pe(C.dna_sub, local=True),
+        init_row=_local_zero_init, init_col=_local_zero_init,
+        region=T.REGION_ALL,
+        traceback=C.affine_tb(T.STOP_PTR_END), **kw)
+
+
+def banded_local_affine(band: int = 16, **kw) -> T.DPKernelSpec:
+    """#12 Banded SWG, score-only (minimap2 extension stage; no traceback)."""
+    return T.DPKernelSpec(
+        name="banded_local_affine", n_layers=3,
+        pe=C.affine_pe(C.dna_sub, local=True),
+        init_row=_local_zero_init, init_col=_local_zero_init,
+        region=T.REGION_ALL, band=band,
+        traceback=None, **kw)

@@ -1,0 +1,67 @@
+"""Kernels #1 (global), #3 (local), #6 (overlap), #7 (semi-global),
+#11 (banded global) — DNA alignment with linear gap penalty.
+
+These five differ only in initialization, objective region, traceback
+start/stop, and banding — exactly the 'Modifications' column of Table 1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import types as T
+from . import common as C
+
+
+def default_params(match=2, mismatch=-3, gap=-2):
+    return {"match": jnp.int32(match), "mismatch": jnp.int32(mismatch),
+            "gap": jnp.int32(gap)}
+
+
+def global_linear(**kw) -> T.DPKernelSpec:
+    """#1 Needleman-Wunsch."""
+    return T.DPKernelSpec(
+        name="global_linear", n_layers=1,
+        pe=C.linear_pe(C.dna_sub),
+        init_row=C.linear_gap_init, init_col=C.linear_gap_init,
+        region=T.REGION_CORNER,
+        traceback=C.linear_tb(T.STOP_ORIGIN), **kw)
+
+
+def local_linear(**kw) -> T.DPKernelSpec:
+    """#3 Smith-Waterman: zero-clamped scores, best anywhere, stop at END ptr."""
+    return T.DPKernelSpec(
+        name="local_linear", n_layers=1,
+        pe=C.linear_pe(C.dna_sub, local=True),
+        init_row=C.zeros_init(1), init_col=C.zeros_init(1),
+        region=T.REGION_ALL,
+        traceback=C.linear_tb(T.STOP_PTR_END), **kw)
+
+
+def overlap(**kw) -> T.DPKernelSpec:
+    """#6 Overlap (suffix-prefix) alignment for assembly."""
+    return T.DPKernelSpec(
+        name="overlap", n_layers=1,
+        pe=C.linear_pe(C.dna_sub),
+        init_row=C.zeros_init(1), init_col=C.zeros_init(1),
+        region=T.REGION_LAST_ROW_COL,
+        traceback=C.linear_tb(T.STOP_EDGE), **kw)
+
+
+def semiglobal(**kw) -> T.DPKernelSpec:
+    """#7 Semi-global: query end-to-end vs a reference substring."""
+    return T.DPKernelSpec(
+        name="semiglobal", n_layers=1,
+        pe=C.linear_pe(C.dna_sub),
+        init_row=C.zeros_init(1), init_col=C.linear_gap_init,
+        region=T.REGION_LAST_ROW,
+        traceback=C.linear_tb(T.STOP_TOP_ROW), **kw)
+
+
+def banded_global_linear(band: int = 16, **kw) -> T.DPKernelSpec:
+    """#11 Banded Needleman-Wunsch (fixed band |i-j| <= W)."""
+    return T.DPKernelSpec(
+        name="banded_global_linear", n_layers=1,
+        pe=C.linear_pe(C.dna_sub),
+        init_row=C.linear_gap_init, init_col=C.linear_gap_init,
+        region=T.REGION_CORNER, band=band,
+        traceback=C.linear_tb(T.STOP_ORIGIN), **kw)

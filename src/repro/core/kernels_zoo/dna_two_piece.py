@@ -1,0 +1,38 @@
+"""Kernels #5 (global two-piece affine) and #13 (banded global two-piece
+affine) — minimap2's dual gap model, N_LAYERS=5.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import types as T
+from . import common as C
+
+
+def default_params(match=2, mismatch=-4, gap_open=-4, gap_extend=-2,
+                   gap_open2=-24, gap_extend2=-1):
+    """minimap2-flavored defaults: piece 1 opens cheap/extends dear, piece 2
+    opens dear/extends cheap (long gaps from structural variants)."""
+    return {"match": jnp.int32(match), "mismatch": jnp.int32(mismatch),
+            "gap_open": jnp.int32(gap_open), "gap_extend": jnp.int32(gap_extend),
+            "gap_open2": jnp.int32(gap_open2), "gap_extend2": jnp.int32(gap_extend2)}
+
+
+def global_two_piece(**kw) -> T.DPKernelSpec:
+    """#5."""
+    return T.DPKernelSpec(
+        name="global_two_piece", n_layers=5,
+        pe=C.two_piece_pe(C.dna_sub),
+        init_row=C.two_piece_init_row, init_col=C.two_piece_init_col,
+        region=T.REGION_CORNER,
+        traceback=C.two_piece_tb(T.STOP_ORIGIN), **kw)
+
+
+def banded_global_two_piece(band: int = 16, **kw) -> T.DPKernelSpec:
+    """#13."""
+    return T.DPKernelSpec(
+        name="banded_global_two_piece", n_layers=5,
+        pe=C.two_piece_pe(C.dna_sub),
+        init_row=C.two_piece_init_row, init_col=C.two_piece_init_col,
+        region=T.REGION_CORNER, band=band,
+        traceback=C.two_piece_tb(T.STOP_ORIGIN), **kw)

@@ -1,0 +1,79 @@
+"""Kernels #9 (DTW over complex signals) and #14 (sDTW over integer
+squiggles) — min-objective DP, the paper's 'replace max with min' variation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import types as T
+from . import common as C
+
+_INF = 1e30
+
+
+def _dtw_pe(cost_fn):
+    def pe(params, q, r, diag, up, left, i, j):
+        c = cost_fn(params, q, r)
+        best = diag[0]
+        ptr = jnp.int32(C.P_DIAG)
+        ptr = jnp.where(up[0] < best, C.P_UP, ptr)
+        best = jnp.minimum(best, up[0])
+        ptr = jnp.where(left[0] < best, C.P_LEFT, ptr)
+        best = jnp.minimum(best, left[0])
+        return (c + best)[None], ptr
+    return pe
+
+
+def _manhattan_complex(params, q, r):
+    return jnp.abs(q[0] - r[0]) + jnp.abs(q[1] - r[1])
+
+
+def _abs_int(params, q, r):
+    return jnp.abs(q.astype(jnp.int32) - r.astype(jnp.int32))
+
+
+def _corner_zero_init(dt):
+    def init(params, k):
+        v = jnp.where(k == 0, jnp.asarray(0, dt), jnp.asarray(_INF if dt == jnp.float32 else (1 << 30), dt))
+        return v[..., None]
+    return init
+
+
+def dtw(**kw) -> T.DPKernelSpec:
+    """#9: global DTW on complex-valued signals (Manhattan distance)."""
+    return T.DPKernelSpec(
+        name="dtw", n_layers=1,
+        pe=_dtw_pe(_manhattan_complex),
+        init_row=_corner_zero_init(jnp.float32),
+        init_col=_corner_zero_init(jnp.float32),
+        objective="min", region=T.REGION_CORNER,
+        score_dtype=jnp.float32, char_shape=(2,), char_dtype=jnp.float32,
+        traceback=C.linear_tb(T.STOP_ORIGIN), **kw)
+
+
+def default_dtw_params():
+    return {}
+
+
+def _sdtw_row_init(params, j):
+    return jnp.zeros(jnp.shape(j) + (1,), jnp.int32)
+
+
+def _sdtw_col_init(params, i):
+    return jnp.where(i == 0, 0, 1 << 30)[..., None].astype(jnp.int32)
+
+
+def sdtw(**kw) -> T.DPKernelSpec:
+    """#14: semi-global DTW (SquiggleFilter): query anchored, free start/end
+    along the reference; score-only (no traceback, like the v1.1 baseline)."""
+    return T.DPKernelSpec(
+        name="sdtw", n_layers=1,
+        pe=_dtw_pe(_abs_int),
+        init_row=_sdtw_row_init, init_col=_sdtw_col_init,
+        objective="min", region=T.REGION_LAST_ROW,
+        score_dtype=jnp.int32, char_shape=(), char_dtype=jnp.int32,
+        traceback=None, **kw)
+
+
+def default_sdtw_params():
+    return {}

@@ -1,0 +1,46 @@
+"""Kernel #8: Profile-profile alignment (MSA-style).
+
+Alphabet = profile columns: 5-vectors of {A, C, G, T, gap} frequencies.
+Substitution = Sum-of-Pairs score q^T S r (two matrix-vector products per
+cell — the paper's DSP-heavy kernel, here an MXU-friendly contraction).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import types as T
+from . import common as C
+
+
+def default_params(match=2.0, mismatch=-3.0, gap=-2.0, gap_gap=0.0):
+    s = np.full((5, 5), mismatch, np.float32)
+    np.fill_diagonal(s, match)
+    s[4, :] = gap      # residue vs gap column
+    s[:, 4] = gap
+    s[4, 4] = gap_gap  # gap vs gap is free
+    return {"sub_matrix": jnp.asarray(s), "gap": jnp.float32(gap)}
+
+
+def _sop_sub(params, q, r):
+    return q @ params["sub_matrix"] @ r
+
+
+def _gap_init(params, k):
+    return (params["gap"] * k.astype(jnp.float32))[..., None]
+
+
+def profile(**kw) -> T.DPKernelSpec:
+    return T.DPKernelSpec(
+        name="profile", n_layers=1,
+        pe=C.linear_pe(_sop_sub),
+        init_row=_gap_init, init_col=_gap_init,
+        region=T.REGION_CORNER,
+        score_dtype=jnp.float32, char_shape=(5,), char_dtype=jnp.float32,
+        traceback=C.linear_tb(T.STOP_ORIGIN), **kw)
+
+
+def make_profile(rng: np.random.Generator, n: int, n_seqs: int = 8) -> np.ndarray:
+    """Random sequence profile: per-column frequencies over {A,C,G,T,-}."""
+    counts = rng.multinomial(n_seqs, [0.22, 0.22, 0.22, 0.22, 0.12], size=n)
+    return (counts / n_seqs).astype(np.float32)

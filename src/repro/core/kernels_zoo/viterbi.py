@@ -1,0 +1,72 @@
+"""Kernel #10: Viterbi algorithm for a 3-state (M/I/D) PairHMM, log-space.
+
+Listing 2 (right): parameters are two transition scalars (mu, lambda) and a
+5x5 emission matrix over {A, C, G, T, -}; no traceback (paper Table 1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import types as T
+
+_DEAD = -1e30
+
+
+def default_params(delta=0.2, eps=0.1, match_p=0.9):
+    """log-space PairHMM parameters.
+
+    delta (lambda in the paper's notation): gap-open probability;
+    eps (mu): gap-extend probability; emission favors matching bases.
+    """
+    n = 5
+    em = np.full((n, n), (1.0 - match_p) / (n - 1))
+    np.fill_diagonal(em, match_p)
+    return {
+        "log_lambda": jnp.float32(np.log(delta)),
+        "log_mu": jnp.float32(np.log(eps)),
+        "t_mm": jnp.float32(np.log(1.0 - 2.0 * delta)),
+        "t_gm": jnp.float32(np.log(1.0 - eps)),
+        "emission": jnp.asarray(np.log(em), jnp.float32),
+        "gap_emission": jnp.float32(np.log(0.25)),
+    }
+
+
+def _pe(params, q, r, diag, up, left, i, j):
+    em = params["emission"][q.astype(jnp.int32), r.astype(jnp.int32)]
+    t_mi = params["log_lambda"]   # M -> I/D (open)
+    t_ii = params["log_mu"]       # I -> I / D -> D (extend)
+    m = em + jnp.maximum(diag[0] + params["t_mm"],
+                         jnp.maximum(diag[1], diag[2]) + params["t_gm"])
+    ins = params["gap_emission"] + jnp.maximum(left[0] + t_mi, left[1] + t_ii)
+    dele = params["gap_emission"] + jnp.maximum(up[0] + t_mi, up[2] + t_ii)
+    return jnp.stack([m, ins, dele]), jnp.int32(0)
+
+
+def _init_row(params, j):
+    t_mi, t_ii = params["log_lambda"], params["log_mu"]
+    ge = params["gap_emission"]
+    ins = jnp.where(j == 0, _DEAD,
+                    t_mi + (j - 1) * t_ii + j * ge).astype(jnp.float32)
+    m = jnp.where(j == 0, 0.0, _DEAD).astype(jnp.float32)
+    dead = jnp.full_like(m, _DEAD)
+    return jnp.stack([m, ins, dead], axis=-1)
+
+
+def _init_col(params, i):
+    t_mi, t_ii = params["log_lambda"], params["log_mu"]
+    ge = params["gap_emission"]
+    dele = jnp.where(i == 0, _DEAD,
+                     t_mi + (i - 1) * t_ii + i * ge).astype(jnp.float32)
+    m = jnp.where(i == 0, 0.0, _DEAD).astype(jnp.float32)
+    dead = jnp.full_like(m, _DEAD)
+    return jnp.stack([m, dead, dele], axis=-1)
+
+
+def viterbi(**kw) -> T.DPKernelSpec:
+    return T.DPKernelSpec(
+        name="viterbi_pairhmm", n_layers=3,
+        pe=_pe, init_row=_init_row, init_col=_init_col,
+        objective="max", region=T.REGION_CORNER,
+        score_dtype=jnp.float32,
+        traceback=None, **kw)

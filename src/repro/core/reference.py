@@ -1,0 +1,77 @@
+"""Row-major reference engine — the always-correct oracle.
+
+Computes the full (Q+1, R+1, L) score matrix with a doubly-nested
+``lax.scan`` (rows, then columns), exactly following the textbook
+recurrence order.  Slow but simple; every other engine (wavefront, banded,
+Pallas) is validated against this one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+from .spec_utils import band_mask, region_mask
+
+
+def fill_matrix(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None):
+    """Return (scores (Q+1, R+1, L), tb (Q+1, R+1) uint8)."""
+    Q = query.shape[0]
+    R = ref.shape[0]
+    L = spec.n_layers
+    dt = spec.score_dtype
+    sent = spec.sentinel()
+    q_len = jnp.asarray(Q if q_len is None else q_len, jnp.int32)
+    r_len = jnp.asarray(R if r_len is None else r_len, jnp.int32)
+
+    j_idx = jnp.arange(R + 1, dtype=jnp.int32)
+    i_idx = jnp.arange(Q + 1, dtype=jnp.int32)
+    row0 = jnp.asarray(spec.init_row(params, j_idx), dt).reshape(R + 1, L)
+    col0 = jnp.asarray(spec.init_col(params, i_idx), dt).reshape(Q + 1, L)
+    # Mask boundaries beyond the effective lengths / outside the band.
+    row0 = jnp.where((j_idx[:, None] <= r_len) & band_mask(spec, 0, j_idx)[:, None],
+                     row0, sent)
+    col0 = jnp.where((i_idx[:, None] <= q_len) & band_mask(spec, i_idx, 0)[:, None],
+                     col0, sent)
+
+    def row_step(prev_row, row_in):
+        i, q_char = row_in  # i in [1, Q]
+
+        def col_step(left, col_in):
+            j, r_char, diag, up = col_in  # j in [1, R]
+            scores, ptr = spec.pe(params, q_char, r_char, diag, up, left, i, j)
+            scores = jnp.asarray(scores, dt).reshape(L)
+            valid = (i <= q_len) & (j <= r_len) & band_mask(spec, i, j)
+            scores = jnp.where(valid, scores, sent)
+            ptr = jnp.where(valid, jnp.asarray(ptr, jnp.uint8), jnp.uint8(0))
+            return scores, (scores, ptr)
+
+        left0 = col0[i]
+        cols = (jnp.arange(1, R + 1, dtype=jnp.int32), ref,
+                prev_row[:-1], prev_row[1:])
+        _, (cells, ptrs) = jax.lax.scan(col_step, left0, cols)
+        new_row = jnp.concatenate([left0[None], cells], axis=0)  # (R+1, L)
+        return new_row, (new_row, jnp.concatenate([jnp.zeros((1,), jnp.uint8), ptrs]))
+
+    rows_in = (jnp.arange(1, Q + 1, dtype=jnp.int32), query)
+    _, (rows, tbs) = jax.lax.scan(row_step, row0, rows_in)
+    scores = jnp.concatenate([row0[None], rows], axis=0)        # (Q+1, R+1, L)
+    tb = jnp.concatenate([jnp.zeros((1, R + 1), jnp.uint8), tbs], axis=0)
+    return scores, tb
+
+
+def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None) -> T.DPResult:
+    Q, R = query.shape[0], ref.shape[0]
+    q_len = jnp.asarray(Q if q_len is None else q_len, jnp.int32)
+    r_len = jnp.asarray(R if r_len is None else r_len, jnp.int32)
+    scores, tb = fill_matrix(spec, params, query, ref, q_len, r_len)
+    prim = scores[:, :, spec.primary_layer]
+    ii = jnp.arange(Q + 1, dtype=jnp.int32)[:, None]
+    jj = jnp.arange(R + 1, dtype=jnp.int32)[None, :]
+    mask = region_mask(spec, ii, jj, q_len, r_len)
+    cand = jnp.where(mask, prim, spec.sentinel())
+    flat = spec.arg_best(cand.reshape(-1))
+    best_i = (flat // (R + 1)).astype(jnp.int32)
+    best_j = (flat % (R + 1)).astype(jnp.int32)
+    return T.DPResult(score=cand.reshape(-1)[flat], end_i=best_i, end_j=best_j,
+                      tb=tb, tb_layout="row", matrix=scores)

@@ -1,0 +1,33 @@
+"""Shared helpers used by every back-end engine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import types as T
+
+
+def band_mask(spec: T.DPKernelSpec, i, j):
+    """Fixed banding (paper §2.2.4 / front-end step 6): keep |i - j| <= W."""
+    if spec.band is None:
+        return jnp.broadcast_to(jnp.asarray(True), jnp.broadcast_shapes(
+            jnp.shape(i), jnp.shape(j)))
+    return jnp.abs(jnp.asarray(i, jnp.int32) - jnp.asarray(j, jnp.int32)) <= spec.band
+
+
+def region_mask(spec: T.DPKernelSpec, i, j, q_len, r_len):
+    """Objective-region mask — the back-end's 'local max' bookkeeping (§5.2).
+
+    Only interior cells (i>=1, j>=1) within the effective lengths compete.
+    """
+    interior = (i >= 1) & (j >= 1) & (i <= q_len) & (j <= r_len)
+    if spec.region == T.REGION_CORNER:
+        sel = (i == q_len) & (j == r_len)
+    elif spec.region == T.REGION_ALL:
+        sel = jnp.broadcast_to(jnp.asarray(True), jnp.shape(interior))
+    elif spec.region == T.REGION_LAST_ROW:
+        sel = i == q_len
+    elif spec.region == T.REGION_LAST_ROW_COL:
+        sel = (i == q_len) | (j == r_len)
+    else:
+        raise ValueError(f"unknown region {spec.region!r}")
+    return interior & sel & band_mask(spec, i, j)

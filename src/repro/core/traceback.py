@@ -1,0 +1,128 @@
+"""FSM traceback executor (paper §5.2, Listings 3/7).
+
+The matrix fill stores one pointer byte per cell; traceback is a pointer
+chase driven by the kernel's FSM: ``(state, ptr) -> (move, next_state)``.
+Runs as a ``lax.while_loop`` over at most Q+R steps; vmap-able.
+
+Pointer stores are layout-dependent:
+  * 'diag' (wavefront engines): tb[(i+j) - 1, i]   (coalesced, §5.2)
+  * 'row'  (reference engine):  tb[i, j]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+
+
+def _make_reader(tb, layout):
+    if isinstance(layout, tuple) and layout[0] == "chunk":
+        # Pallas kernel layout: tb[chunk, lane, w], strip height n_pe,
+        # lane = (i-1) % n_pe, chunk-local wavefront w = lane + j - 1.
+        n_pe = layout[1]
+
+        def read(i, j):
+            c = jnp.clip((i - 1) // n_pe, 0, tb.shape[0] - 1)
+            lane = jnp.clip((i - 1) % n_pe, 0, n_pe - 1)
+            w = jnp.clip(lane + j - 1, 0, tb.shape[2] - 1)
+            return tb[c, lane, w]
+        return read
+    if layout == "diag":
+        def read(i, j):
+            d = i + j - 1
+            d = jnp.clip(d, 0, tb.shape[0] - 1)
+            return tb[d, jnp.clip(i, 0, tb.shape[1] - 1)]
+    elif layout == "row":
+        def read(i, j):
+            return tb[jnp.clip(i, 0, tb.shape[0] - 1),
+                      jnp.clip(j, 0, tb.shape[1] - 1)]
+    else:
+        raise ValueError(f"unknown tb layout {layout!r}")
+    return read
+
+
+def run(spec: T.DPKernelSpec, result: T.DPResult, max_len: int) -> T.Alignment:
+    """Walk pointers from the optimum cell back to the path start.
+
+    ``moves`` comes out in end->start order; ``n_moves`` gives its length.
+    """
+    tspec = spec.traceback
+    assert tspec is not None, f"kernel {spec.name} has no traceback"
+    read = _make_reader(result.tb, result.tb_layout)
+
+    def cond(c):
+        i, j, state, k, done, moves = c
+        return jnp.logical_and(jnp.logical_not(done), k < max_len)
+
+    def body(c):
+        i, j, state, k, done, moves = c
+        stop_here = tspec.stop_fn(i, j)
+        ptr = read(i, j).astype(jnp.int32)
+        move, nstate = tspec.fsm(state, ptr)
+        move = jnp.asarray(move, jnp.int32)
+        # Boundary cells are init cells: no pointer was stored.  For kernels
+        # that trace to the origin/top row their moves are implicit (row 0
+        # walks LEFT, column 0 walks UP); local/overlap kernels instead end
+        # the path at the boundary (ptr END / stop condition).
+        if tspec.stop in (T.STOP_ORIGIN, T.STOP_TOP_ROW):
+            on_row0 = (i == 0) & (j > 0)
+            on_col0 = (j == 0) & (i > 0)
+            move = jnp.where(on_row0, T.MOVE_LEFT,
+                             jnp.where(on_col0, T.MOVE_UP, move))
+            nstate = jnp.where(on_row0 | on_col0, state, nstate)
+        is_end = jnp.logical_or(stop_here, move == T.MOVE_END)
+        rec = jnp.where(is_end, jnp.int32(T.MOVE_END), move)
+        moves = jax.lax.dynamic_update_index_in_dim(
+            moves, jnp.where(is_end, jnp.uint8(0), rec.astype(jnp.uint8)), k, 0)
+        di = jnp.where((move == T.MOVE_DIAG) | (move == T.MOVE_UP), 1, 0)
+        dj = jnp.where((move == T.MOVE_DIAG) | (move == T.MOVE_LEFT), 1, 0)
+        i2 = jnp.where(is_end, i, i - di)
+        j2 = jnp.where(is_end, j, j - dj)
+        k2 = jnp.where(is_end, k, k + 1)
+        return (i2, j2, jnp.asarray(nstate, jnp.int32), k2, is_end, moves)
+
+    moves0 = jnp.zeros((max_len,), jnp.uint8)
+    init = (jnp.asarray(result.end_i, jnp.int32),
+            jnp.asarray(result.end_j, jnp.int32),
+            jnp.int32(tspec.initial_state), jnp.int32(0),
+            jnp.asarray(False), moves0)
+    i, j, _, k, _, moves = jax.lax.while_loop(cond, body, init)
+    return T.Alignment(score=result.score, end_i=result.end_i, end_j=result.end_j,
+                       start_i=i, start_j=j, moves=moves, n_moves=k)
+
+
+# ---------------------------------------------------------------------------
+# Host-side utilities (not jitted)
+# ---------------------------------------------------------------------------
+def moves_to_cigar(moves, n_moves) -> str:
+    """end->start move array -> CIGAR string (start->end order)."""
+    ops = {T.MOVE_DIAG: "M", T.MOVE_UP: "D", T.MOVE_LEFT: "I"}
+    seq = [ops[int(m)] for m in list(moves[: int(n_moves)])[::-1]]
+    if not seq:
+        return ""
+    out, cur, cnt = [], seq[0], 1
+    for o in seq[1:]:
+        if o == cur:
+            cnt += 1
+        else:
+            out.append(f"{cnt}{cur}")
+            cur, cnt = o, 1
+    out.append(f"{cnt}{cur}")
+    return "".join(out)
+
+
+def path_cells(alignment: T.Alignment):
+    """Yield the (i, j) cells on the path from start to end (host-side)."""
+    i, j = int(alignment.start_i), int(alignment.start_j)
+    cells = [(i, j)]
+    for m in list(alignment.moves[: int(alignment.n_moves)])[::-1]:
+        m = int(m)
+        if m == T.MOVE_DIAG:
+            i, j = i + 1, j + 1
+        elif m == T.MOVE_UP:
+            i += 1
+        elif m == T.MOVE_LEFT:
+            j += 1
+        cells.append((i, j))
+    return cells

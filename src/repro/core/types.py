@@ -1,0 +1,165 @@
+"""Core datatypes for the DP-HLS-style 2-D dynamic programming framework.
+
+The paper's front-end lets users declare a DP kernel as (alphabet, scoring
+layers, scoring params, init, PE function, traceback FSM, banding).  These are
+the JAX-side analogues of those declarations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Traceback moves (alignment operations).  These are the AL_* codes of the
+# paper's Listing 7: a move consumes characters from one or both sequences.
+# ---------------------------------------------------------------------------
+MOVE_END = 0   # traceback terminates at this cell
+MOVE_DIAG = 1  # consume one query + one reference char (match/mismatch)
+MOVE_UP = 2    # consume one query char (deletion w.r.t. reference)
+MOVE_LEFT = 3  # consume one reference char (insertion w.r.t. reference)
+
+MOVE_NAMES = {MOVE_END: "END", MOVE_DIAG: "M", MOVE_UP: "D", MOVE_LEFT: "I"}
+
+# Objective-region selectors (the paper's traceback start strategies; the
+# back-end's per-PE local-max + reduction logic is driven by these).
+REGION_CORNER = "corner"          # global alignment: score at (q_len, r_len)
+REGION_ALL = "all"                # local alignment: best anywhere
+REGION_LAST_ROW = "last_row"      # semi-global: best in the last row
+REGION_LAST_ROW_COL = "last_row_col"  # overlap: best in last row or column
+
+# Traceback stop conditions.
+STOP_ORIGIN = "origin"      # stop at (0, 0)            (global)
+STOP_TOP_ROW = "top_row"    # stop when i == 0          (semi-global)
+STOP_EDGE = "edge"          # stop when i == 0 or j == 0 (overlap)
+STOP_PTR_END = "ptr_end"    # stop only on an END pointer (local)
+
+
+@dataclasses.dataclass(frozen=True)
+class TracebackSpec:
+    """Traceback FSM declaration (paper front-end steps 4-5, Listings 3/7).
+
+    ``fsm(state, ptr) -> (move, next_state)`` maps the FSM state and the
+    stored traceback pointer byte of the current cell to an alignment move
+    and the successor state.  It must be written with jnp ops (it is traced
+    inside ``lax.while_loop``).
+    """
+    n_states: int
+    fsm: Callable[[Any, Any], tuple]
+    stop: str = STOP_ORIGIN
+    initial_state: int = 0
+
+    def stop_fn(self, i, j):
+        if self.stop == STOP_ORIGIN:
+            return jnp.logical_and(i == 0, j == 0)
+        if self.stop == STOP_TOP_ROW:
+            return i == 0
+        if self.stop == STOP_EDGE:
+            return jnp.logical_or(i == 0, j == 0)
+        if self.stop == STOP_PTR_END:
+            # Safety net: also stop at the matrix origin.
+            return jnp.logical_and(i == 0, j == 0)
+        raise ValueError(f"unknown stop condition {self.stop!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DPKernelSpec:
+    """A 2-D DP kernel declaration — the JAX analogue of the DP-HLS front-end.
+
+    Attributes mirror the paper's six front-end steps:
+      * ``char_shape``/``char_dtype``: the sequence alphabet (step 1.1).
+        ``()`` + integer dtype for DNA/protein codes; ``(5,)`` float for
+        profiles; ``(2,)`` float for complex DTW signals.
+      * ``n_layers``: N_LAYERS, scores kept per DP cell (step 1.2).
+      * ``pe``: the PE function (step 3, Listings 5/6).  Signature
+        ``pe(params, q_char, r_char, diag[L], up[L], left[L], i, j) ->
+        (scores[L], tb_ptr)`` operating on scalars/one cell; the back-end
+        vmaps it across the wavefront.
+      * ``init_row``/``init_col``: boundary scores (step 2, Listing 4).
+        ``init_row(params, j) -> [L]`` vectorized over a j-index array.
+      * ``traceback``: the FSM (steps 4-5) or ``None`` (no-traceback kernels).
+      * ``band``: fixed banding width W, cells with |i - j| > W pruned
+        (step 6).  ``None`` disables banding.
+      * ``objective``: 'max' or 'min' (DTW-family minimizes).
+      * ``region``: where the optimum is searched / traceback starts.
+    """
+    name: str
+    n_layers: int
+    pe: Callable
+    init_row: Callable
+    init_col: Callable
+    objective: str = "max"
+    region: str = REGION_CORNER
+    score_dtype: Any = jnp.int32
+    char_shape: tuple = ()
+    char_dtype: Any = jnp.uint8
+    traceback: Optional[TracebackSpec] = None
+    band: Optional[int] = None
+    primary_layer: int = 0
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def is_min(self) -> bool:
+        return self.objective == "min"
+
+    def sentinel(self):
+        """Value representing 'invalid / unreachable' cells."""
+        if jnp.issubdtype(jnp.dtype(self.score_dtype), jnp.floating):
+            mag = jnp.asarray(1e30, self.score_dtype)
+        else:
+            mag = jnp.asarray(1 << 30, self.score_dtype)
+        return mag if self.is_min else -mag
+
+    def better(self, a, b):
+        """a strictly better than b under the objective."""
+        return (a < b) if self.is_min else (a > b)
+
+    def reduce_best(self, x, axis=None):
+        return jnp.min(x, axis=axis) if self.is_min else jnp.max(x, axis=axis)
+
+    def arg_best(self, x, axis=None):
+        return jnp.argmin(x, axis=axis) if self.is_min else jnp.argmax(x, axis=axis)
+
+
+import jax  # noqa: E402  (pytree registration for jit/vmap boundaries)
+
+
+@dataclasses.dataclass
+class DPResult:
+    """Matrix-fill output: optimum + coalesced traceback pointer store.
+
+    ``tb`` layout is wavefront-major ``(n_diags, lanes)`` — the paper's
+    address-coalesced traceback memory (§5.2): every wavefront writes one
+    contiguous row, lane k holds the pointer of DP row i = k on diagonal d.
+    ``tb_layout`` is 'diag' for the wavefront engines and 'row' for the
+    reference engine's (Q+1, R+1) matrix.
+    """
+    score: Any
+    end_i: Any
+    end_j: Any
+    tb: Any = None
+    tb_layout: str = "diag"
+    matrix: Any = None  # full (Q+1, R+1, L) scores — reference engine only
+
+
+@dataclasses.dataclass
+class Alignment:
+    """Final alignment: score, end/start cells and the move string."""
+    score: Any
+    end_i: Any
+    end_j: Any
+    start_i: Any = None
+    start_j: Any = None
+    moves: Any = None      # uint8 [max_len], reversed (end -> start) order
+    n_moves: Any = None
+
+
+# jit/vmap-able result containers (tb_layout is static metadata).
+jax.tree_util.register_dataclass(
+    DPResult, data_fields=["score", "end_i", "end_j", "tb", "matrix"],
+    meta_fields=["tb_layout"])
+jax.tree_util.register_dataclass(
+    Alignment, data_fields=["score", "end_i", "end_j", "start_i", "start_j",
+                            "moves", "n_moves"],
+    meta_fields=[])

@@ -1,0 +1,1 @@
+from .synthetic import LMBatcher, genomics_pairs

@@ -1,0 +1,2 @@
+from .heartbeat import ALIVE, DEAD, STRAGGLER, HeartbeatMonitor
+from .elastic import make_mesh, plan_mesh, resume_on

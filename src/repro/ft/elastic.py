@@ -1,0 +1,57 @@
+"""Elastic re-sharding: shrink/regrow the mesh after failures.
+
+The policy layer: given the surviving device count, pick the largest valid
+(data, model) mesh that preserves the model axis if possible (TP degree is
+a property of the checkpointed layout divisibility, DP degree is free),
+then restore the latest checkpoint with the new shardings.  Because
+checkpoints are saved as full logical arrays (checkpoint.manager), restore
+onto any mesh is just device_put with the new NamedShardings — this is the
+whole elastic story, exercised in tests by re-sharding between fake-device
+meshes of different shapes.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro import checkpoint
+
+
+def plan_mesh(n_devices: int, model_degree: int,
+              pod_size: Optional[int] = None) -> Tuple[int, ...]:
+    """Largest usable (pod?, data, model) shape for n surviving devices.
+
+    TP degree is a *memory-fit* requirement of the checkpointed layout, so
+    it is preserved whenever at least one full model replica fits; excess
+    devices beyond the largest data multiple idle (cheaper than an
+    all-layout reshard).  Only when fewer than ``model_degree`` devices
+    survive does TP degrade by powers of two.
+    """
+    model = model_degree
+    while model > 1 and n_devices < model:
+        model //= 2
+    data = n_devices // model
+    if pod_size and data * model > pod_size and (data * model) % pod_size == 0:
+        return (data * model // pod_size, pod_size // model, model)
+    return (data, model)
+
+
+def make_mesh(devices: List, shape: Tuple[int, ...]) -> Mesh:
+    axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(shape)]
+    n = 1
+    for s in shape:
+        n *= s
+    import numpy as np
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def resume_on(mesh: Mesh, ckpt_dir: str, abstract_state, sharding_fn):
+    """Restore the latest checkpoint onto ``mesh``.
+
+    ``sharding_fn(mesh) -> pytree of NamedShardings`` matching the state.
+    Returns (state, step) or (None, None) when no valid checkpoint exists.
+    """
+    shardings = sharding_fn(mesh)
+    return checkpoint.restore_latest(ckpt_dir, abstract_state, shardings)

@@ -1,0 +1,63 @@
+"""Heartbeat / straggler detection for worker fleets.
+
+At 1000+ nodes the question is never *whether* a worker dies mid-step but
+*when*.  The monitor tracks per-worker beat timestamps; a worker is a
+STRAGGLER when its gap exceeds ``straggler_factor`` x the fleet median
+inter-beat interval, and DEAD past ``dead_after`` seconds.  The alignment
+service uses this to re-dispatch work items whose worker went quiet
+(deadline re-dispatch), and the train driver uses it to trigger an elastic
+re-shard (ft.elastic).
+
+Pure bookkeeping over injected timestamps — deterministic to test, and the
+same logic drives real wall-clock use (``now=None`` -> time.time()).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+ALIVE, STRAGGLER, DEAD = "alive", "straggler", "dead"
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    dead_after: float = 30.0
+    straggler_factor: float = 3.0
+    min_interval: float = 0.05
+
+    def __post_init__(self):
+        self._last: Dict[str, float] = {}
+        self._intervals: Dict[str, List[float]] = {}
+
+    def beat(self, worker: str, now: Optional[float] = None):
+        now = time.time() if now is None else now
+        prev = self._last.get(worker)
+        if prev is not None:
+            self._intervals.setdefault(worker, []).append(now - prev)
+            self._intervals[worker] = self._intervals[worker][-32:]
+        self._last[worker] = now
+
+    def _median_interval(self) -> float:
+        all_iv = sorted(iv for ivs in self._intervals.values() for iv in ivs)
+        if not all_iv:
+            return self.min_interval
+        return max(all_iv[len(all_iv) // 2], self.min_interval)
+
+    def status(self, worker: str, now: Optional[float] = None) -> str:
+        now = time.time() if now is None else now
+        last = self._last.get(worker)
+        if last is None:
+            return DEAD
+        gap = now - last
+        if gap > self.dead_after:
+            return DEAD
+        if gap > self.straggler_factor * self._median_interval():
+            return STRAGGLER
+        return ALIVE
+
+    def fleet(self, now: Optional[float] = None) -> Dict[str, str]:
+        return {w: self.status(w, now) for w in self._last}
+
+    def alive_workers(self, now: Optional[float] = None) -> List[str]:
+        return [w for w, s in self.fleet(now).items() if s == ALIVE]

@@ -1,0 +1,23 @@
+"""jit'd wrapper: model-layout (B, S, H, hd) GQA in/out around the kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def flash(q, k, v, *, causal: bool = True, window=None, blk: int = 512,
+          interpret: bool = False):
+    """q: (B, S, H, hd); k/v: (B, S, Kh, hd) with H = Kh * G."""
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    kb = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vb = jnp.repeat(v, G, axis=2) if G > 1 else v
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    o = K.flash_fill(flat(q), flat(kb), flat(vb), causal=causal,
+                     window=window, blk=blk, interpret=interpret)
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

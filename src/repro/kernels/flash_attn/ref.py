@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def run(q, k, v, *, causal: bool, window=None, k_len=None, scale=None):
+    """q/k/v: (BH, S, hd) -> (BH, S, hd)."""
+    BH, S, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    if k_len is not None:
+        mask &= (jnp.arange(S) < k_len)[None, :]
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,3 @@
+"""Pallas TPU wavefront matrix-fill kernel (kernel.py), its jit wrapper
+(ops.py) and pure-jnp oracle (ref.py)."""
+from . import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,193 @@
+"""Pallas TPU kernel for the DP matrix fill — the back-end §5.1/§5.2.
+
+Hardware mapping (FPGA -> TPU):
+  * the N_PE linear systolic array becomes the lane dimension of VPU vector
+    registers: one wavefront of N_PE cells is evaluated per inner-loop step;
+  * the chunked-rows schedule is the Pallas grid: grid step c processes the
+    strip of query rows [c*N_PE, (c+1)*N_PE); the TPU grid is sequential, so
+    the VMEM scratch ``row_buf`` carries the strip's bottom row to the next
+    strip — the paper's Preserved Row Score Buffer;
+  * the reference sequence streams through the lane vector one position per
+    wavefront (the systolic character stream);
+  * traceback pointers are written one lane-vector per wavefront at column
+    w — the address-coalesced TB memory (all PEs hit the same address in
+    different banks);
+  * per-lane running best + final host-side reduction is the per-PE local
+    max and reduction tree of §5.2.
+
+VMEM budget (BlockSpec tiling): the strip's query block (N_PE), the full
+reference (R), boundary rows (R+1, L) and the two wavefront carries
+(N_PE, L) — for N_PE=128, R=4096, L=5, f32 this is ~260 KiB, far inside the
+~16 MiB VMEM of a TPU core; N_PE should be a multiple of the 128-lane VPU
+width on hardware (any value works in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.spec_utils import band_mask, region_mask
+
+
+def _kernel_body(spec, n_pe, treedef, leaf_shapes,
+                 # refs (order must match ops.py):
+                 lens_ref, q_ref, r_ref, init_row_ref, init_col_ref,
+                 *rest):
+    n_params = len(leaf_shapes)
+    param_refs = rest[:n_params]
+    tb_ref, best_ref, bestj_ref = rest[n_params:n_params + 3]
+    row_buf = rest[n_params + 3]
+
+    L = spec.n_layers
+    dt = spec.score_dtype
+    sent = spec.sentinel()
+    R = r_ref.shape[0]
+    cd = spec.char_shape
+
+    leaves = []
+    for ref, shp in zip(param_refs, leaf_shapes):
+        v = ref[...]
+        leaves.append(v.reshape(shp) if shp != v.shape else v)
+    params = jax.tree.unflatten(treedef, leaves)
+
+    c = pl.program_id(0)
+    q_len = lens_ref[0]
+    r_len = lens_ref[1]
+
+    # --- strip setup -------------------------------------------------------
+    @pl.when(c == 0)
+    def _():
+        row_buf[...] = init_row_ref[...]
+
+    @pl.when(c > 0)
+    def _():
+        # top-left boundary of this strip = init column at global row c*N_PE
+        row_buf[0, :] = pl.load(init_col_ref, (pl.ds(c * n_pe, 1), slice(None)))[0]
+
+    col_b = pl.load(init_col_ref, (pl.ds(c * n_pe + 1, n_pe), slice(None)))  # (N_PE, L)
+    q_chunk = q_ref[...]                                                      # (N_PE, *cd)
+
+    l_idx = jax.lax.iota(jnp.int32, n_pe)
+    i_glob = c * n_pe + l_idx + 1            # global DP row per lane
+    vpe = jax.vmap(spec.pe, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))
+
+    def shift_down(v, head):
+        return jnp.concatenate([head[None], v[:-1]], axis=0)
+
+    def wavefront(w, carry):
+        prev2, prev, r_stream, best_v, bestj_v = carry
+        j = w - l_idx + 1                    # column per lane
+        # systolic reference stream: lane 0 consumes ref[w]
+        new_char = pl.load(r_ref, (pl.ds(jnp.clip(w, 0, R - 1), 1),) +
+                           (slice(None),) * len(cd))[0]
+        r_stream = shift_down(r_stream, new_char)
+
+        row_w = pl.load(row_buf, (pl.ds(jnp.clip(w, 0, R), 1), slice(None)))[0]
+        row_w1 = pl.load(row_buf, (pl.ds(jnp.clip(w + 1, 0, R), 1), slice(None)))[0]
+        up_v = shift_down(prev, row_w1)
+        diag_v = shift_down(prev2, row_w)
+        left_v = prev
+        on_col0 = (l_idx == w)[:, None]      # lanes with j == 1
+        left_v = jnp.where(on_col0, col_b, left_v)
+        diag_v = jnp.where(on_col0, shift_down(col_b, row_w), diag_v)
+
+        scores, ptr = vpe(params, q_chunk, r_stream, diag_v, up_v, left_v,
+                          i_glob, j)
+        scores = scores.reshape(n_pe, L).astype(dt)
+        ptr = ptr.reshape(n_pe).astype(jnp.uint8)
+
+        valid = (j >= 1) & (j <= r_len) & (i_glob <= q_len) & \
+            band_mask(spec, i_glob, j)
+        cur = jnp.where(valid[:, None], scores, sent)
+
+        # coalesced TB store: one contiguous lane-vector per wavefront
+        pl.store(tb_ref, (0, slice(None), pl.ds(w, 1)),
+                 jnp.where(valid, ptr, jnp.uint8(0))[:, None])
+
+        # preserved-row buffer: the strip's last PE exports its row
+        j_last = w - (n_pe - 1) + 1
+
+        @pl.when((j_last >= 1) & (j_last <= R))
+        def _():
+            pl.store(row_buf, (pl.ds(jnp.clip(j_last, 0, R), 1), slice(None)),
+                     cur[n_pe - 1][None])
+
+        # per-PE local best over the objective region (§5.2)
+        rmask = region_mask(spec, i_glob, j, q_len, r_len)
+        cand = jnp.where(rmask, cur[:, spec.primary_layer], sent)
+        upd = spec.better(cand, best_v)
+        best_v = jnp.where(upd, cand, best_v)
+        bestj_v = jnp.where(upd, j, bestj_v)
+        return prev, cur, r_stream, best_v, bestj_v
+
+    init = (jnp.full((n_pe, L), sent, dt), jnp.full((n_pe, L), sent, dt),
+            jnp.zeros((n_pe,) + cd, spec.char_dtype),
+            jnp.full((n_pe,), sent, dt), jnp.zeros((n_pe,), jnp.int32))
+    carry = jax.lax.fori_loop(0, n_pe + R - 1, wavefront, init)
+    _, _, _, best_v, bestj_v = carry
+    best_ref[0, :] = best_v
+    bestj_ref[0, :] = bestj_v
+
+
+def wavefront_fill(spec, params, query, ref, lens, n_pe: int = 128,
+                   interpret: bool = False):
+    """Launch the matrix-fill kernel.
+
+    query must be padded to a multiple of n_pe.  Returns (best (C, N_PE),
+    best_j (C, N_PE), tb (C, N_PE, N_PE+R-1)).
+    """
+    Q, R = query.shape[0], ref.shape[0]
+    assert Q % n_pe == 0
+    n_chunks = Q // n_pe
+    L = spec.n_layers
+    dt = spec.score_dtype
+    cd = spec.char_shape
+    wt = n_pe + R - 1
+
+    j_idx = jnp.arange(R + 1, dtype=jnp.int32)
+    i_idx = jnp.arange(Q + 1, dtype=jnp.int32)
+    init_row = jnp.asarray(spec.init_row(params, j_idx), dt).reshape(R + 1, L)
+    init_col = jnp.asarray(spec.init_col(params, i_idx), dt).reshape(Q + 1, L)
+
+    leaves, treedef = jax.tree.flatten(params)
+    leaf_shapes = tuple(l.shape for l in leaves)
+    leaves_in = [jnp.atleast_1d(jnp.asarray(l)) for l in leaves]
+
+    zero_map = lambda nd: (lambda c: (0,) * nd)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),                       # lens
+        pl.BlockSpec((n_pe,) + cd, lambda c: (c,) + (0,) * len(cd)),  # q strip
+        pl.BlockSpec((R,) + cd, zero_map(1 + len(cd))),               # ref
+        pl.BlockSpec((R + 1, L), zero_map(2)),                        # init_row
+        pl.BlockSpec((Q + 1, L), zero_map(2)),                        # init_col
+    ] + [pl.BlockSpec(l.shape, zero_map(l.ndim)) for l in leaves_in]
+
+    out_specs = [
+        pl.BlockSpec((1, n_pe, wt), lambda c: (c, 0, 0)),             # tb
+        pl.BlockSpec((1, n_pe), lambda c: (c, 0)),                    # best
+        pl.BlockSpec((1, n_pe), lambda c: (c, 0)),                    # best_j
+    ]
+    out_shapes = [
+        jax.ShapeDtypeStruct((n_chunks, n_pe, wt), jnp.uint8),
+        jax.ShapeDtypeStruct((n_chunks, n_pe), dt),
+        jax.ShapeDtypeStruct((n_chunks, n_pe), jnp.int32),
+    ]
+
+    kernel = functools.partial(_kernel_body, spec, n_pe, treedef, leaf_shapes)
+    fn = pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((R + 1, L), dt)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )
+    return fn(jnp.asarray(lens, jnp.int32), query, ref, init_row, init_col,
+              *leaves_in)

@@ -1,0 +1,36 @@
+"""jit'd wrapper around the Pallas wavefront kernel: padding, launch, and
+the cross-strip reduction (the paper's block-level reduction logic),
+returning the same DPResult the pure-JAX engines produce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as T
+from . import kernel as K
+
+
+def run(spec, params, query, ref, q_len=None, r_len=None,
+        interpret: bool = False, n_pe: int = 32) -> T.DPResult:
+    Q, R = query.shape[0], ref.shape[0]
+    q_len = jnp.asarray(Q if q_len is None else q_len, jnp.int32)
+    r_len = jnp.asarray(R if r_len is None else r_len, jnp.int32)
+
+    pad = (-Q) % n_pe
+    if pad:
+        query = jnp.concatenate(
+            [query, jnp.zeros((pad,) + query.shape[1:], query.dtype)], axis=0)
+
+    lens = jnp.stack([q_len, r_len])
+    tb, best, best_j = K.wavefront_fill(spec, params, query, ref, lens,
+                                        n_pe=n_pe, interpret=interpret)
+    flat = best.reshape(-1)
+    k = spec.arg_best(flat)
+    score = flat[k]
+    lane = k % n_pe
+    chunk = k // n_pe
+    end_i = (chunk * n_pe + lane + 1).astype(jnp.int32)
+    end_j = best_j.reshape(-1)[k]
+    return T.DPResult(score=score, end_i=end_i, end_j=end_j,
+                      tb=tb, tb_layout=("chunk", n_pe))

@@ -1,0 +1,20 @@
+"""jit'd wrapper: (B, S, H, hd) model-layout in/out around the kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def wkv6(r, k, v, lw, u, *, chunk: int = 32, s_blk: int = 2048,
+         interpret: bool = False):
+    """r/k/v/lw: (B, S, H, hd); u: (H, hd) -> y (B, S, H, hd) f32."""
+    B, S, H, hd = r.shape
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    ub = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    y = K.wkv6_fill(flat(r), flat(k), flat(v), flat(lw), ub,
+                    s_blk=s_blk, chunk=chunk, interpret=interpret)
+    return y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

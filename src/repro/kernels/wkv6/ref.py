@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the WKV6 Pallas kernel: naive per-token recurrence.
+
+    y_t = r_t · (S + (u ⊙ k_t) v_tᵀ);   S ← diag(w_t) S + k_t v_tᵀ
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def run(r, k, v, lw, u):
+    """r/k/v/lw: (BH, S, hd); u: (BH, hd) -> y (BH, S, hd) f32."""
+    r, k, v, lw, u = (t.astype(F32) for t in (r, k, v, lw, u))
+
+    def row(r1, k1, v1, lw1, u1):
+        def step(state, inp):
+            rt, kt, vt, lwt = inp
+            y = rt @ state + (rt @ (u1 * kt)) * vt
+            state = jnp.exp(lwt)[:, None] * state + jnp.outer(kt, vt)
+            return state, y
+        hd = r1.shape[-1]
+        _, ys = jax.lax.scan(step, jnp.zeros((hd, hd), F32),
+                             (r1, k1, v1, lw1))
+        return ys
+
+    return jax.vmap(row)(r, k, v, lw, u)

@@ -1,0 +1,9 @@
+"""Launch layer: mesh construction, per-cell lowering specs, dry-run,
+HLO cost parsing, roofline derivation, and the train/serve CLIs.
+
+NOTE: importing this package does NOT touch jax device state; only
+running ``python -m repro.launch.dryrun`` sets the 512-device flag.
+"""
+from . import hlo_cost, roofline  # noqa: F401
+from .mesh import make_host_mesh, make_production_mesh  # noqa: F401
+from .shardctx import NullCtx, ShardCtx  # noqa: F401

@@ -1,0 +1,56 @@
+"""Sharding context: logical-axis resolution bound to one (mesh, rules).
+
+``ShardCtx`` provides
+  * ``act(x, logical)``    — with_sharding_constraint for activations
+                             (this is the ``ctx['sc']`` hook in the models),
+  * ``leaf(sds, logical)`` — NamedSharding for one array/spec leaf,
+  * ``tree(abstract, logical_tree)`` — shardings for a whole pytree, where
+    the logical tree's leaves are axis tuples (str|None entries).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding import resolve_spec
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(e is None or isinstance(e, str)
+                                        for e in x)
+
+
+class ShardCtx:
+    def __init__(self, mesh, rules):
+        self.mesh, self.rules = mesh, rules
+
+    def act(self, x, logical):
+        if self.mesh is None:
+            return x
+        spec = resolve_spec(x.shape, logical, self.rules, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def __call__(self, x, logical):
+        return self.act(x, logical)
+
+    def leaf(self, sds, logical):
+        spec = resolve_spec(sds.shape, tuple(logical), self.rules, self.mesh)
+        return NamedSharding(self.mesh, spec)
+
+    def tree(self, abstract, logical_tree):
+        flat_a, treedef = jax.tree.flatten(abstract)
+        flat_l = [l for l in jax.tree.leaves(logical_tree, is_leaf=_is_axes)
+                  if _is_axes(l)]
+        assert len(flat_a) == len(flat_l), (len(flat_a), len(flat_l))
+        out = [self.leaf(a, l) for a, l in zip(flat_a, flat_l)]
+        return jax.tree.unflatten(treedef, out)
+
+
+class NullCtx:
+    """Un-sharded smoke-test stand-in."""
+    def act(self, x, logical):
+        return x
+
+    def __call__(self, x, logical):
+        return x

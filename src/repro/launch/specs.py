@@ -1,0 +1,166 @@
+"""Per-cell lowering specs: (arch x shape x mesh) -> (fn, abstract args,
+in/out shardings).  This is the single source of truth the dry-run, the
+roofline, and the tests all lower through.
+
+``input_specs`` follows the assignment: ShapeDtypeStruct stand-ins for
+every model input — weak-type-correct, shardable, zero allocation.
+Frontend stubs: whisper gets precomputed frame embeddings, llava gets
+patch embeddings spliced ahead of the token embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.models import get_model, lm as lm_mod, whisper as whisper_mod
+from repro.optim import AdamWConfig
+from repro import train as train_mod
+from repro.sharding import (TRAIN_RULES, INFER_RULES, TRAIN_RULES_V2,
+                            INFER_RULES_V2)
+from .shardctx import ShardCtx
+
+
+def pick_rules(cfg: ModelConfig, kind: str, version: str = "v1"):
+    """v1 = paper-faithful baseline layouts; v2 = beyond-paper optimized
+    (2-D expert sharding; TP-only inference params where they fit)."""
+    if kind == "train":
+        return TRAIN_RULES if version == "v1" else TRAIN_RULES_V2
+    if version == "v2" and not cfg.infer_fsdp:
+        return INFER_RULES_V2
+    if version == "v2":                      # keep FSDP, still 2-D experts
+        import dataclasses as _dc
+        from repro.sharding import AxisRules
+        return AxisRules(dict(INFER_RULES.rules, **{
+            "expert": INFER_RULES_V2.rules["expert"]}))
+    return INFER_RULES
+
+SDS = jax.ShapeDtypeStruct
+
+LLAVA_PATCHES = 2880            # anyres 5 tiles x 576 patches
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Any                     # (args...) -> outputs, ready for jax.jit
+    args: Tuple                 # abstract ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Train/prefill input pytree + logical axes."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.enc_dec:
+        return ({"frames": SDS((B, S, cfg.d_model), dt),
+                 "tokens": SDS((B, S), jnp.int32)},
+                {"frames": ("batch", None, "embed"),
+                 "tokens": ("batch", None)})
+    if cfg.frontend == "vlm":
+        P = min(LLAVA_PATCHES, S // 2)
+        return ({"prefix_embeds": SDS((B, P, cfg.d_model), dt),
+                 "tokens": SDS((B, S - P), jnp.int32)},
+                {"prefix_embeds": ("batch", None, "embed"),
+                 "tokens": ("batch", None)})
+    return ({"tokens": SDS((B, S), jnp.int32)},
+            {"tokens": ("batch", None)})
+
+
+def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               opt_cfg: Optional[AdamWConfig] = None,
+               use_ef: bool = False, rules=TRAIN_RULES) -> Cell:
+    opt_cfg = opt_cfg or AdamWConfig(quantized=True)
+    sc = ShardCtx(mesh, rules)
+    astate = train_mod.abstract_state(cfg, opt_cfg, use_ef=use_ef)
+    slog = train_mod.state_logical(cfg, opt_cfg, use_ef=use_ef)
+    state_sh = sc.tree(astate, slog)
+    abatch, blog = batch_specs(cfg, shape)
+    batch_sh = sc.tree(abatch, blog)
+    from repro.optim import cosine_with_warmup
+    step = train_mod.make_train_step(cfg, opt_cfg,
+                                     cosine_with_warmup(3e-4, 2000, 100_000),
+                                     sc=sc, use_ef=use_ef)
+    return Cell(name=f"{cfg.name}:{shape.name}", fn=step,
+                args=(astate, abatch),
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate=(0,))
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                 rules=INFER_RULES) -> Cell:
+    sc = ShardCtx(mesh, rules)
+    model = get_model(cfg)
+    aparams = model.abstract(cfg)
+    params_sh = sc.tree(aparams, model.logical(cfg))
+    abatch, blog = batch_specs(cfg, shape)
+    batch_sh = sc.tree(abatch, blog)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.enc_dec:
+        cache_sh = sc.tree(whisper_mod.abstract_cache(cfg, B, S, S),
+                           whisper_mod.cache_logical(cfg))
+    else:
+        cache_sh = sc.tree(lm_mod.abstract_cache(cfg, B, S),
+                           lm_mod.cache_logical(cfg))
+
+    def fn(params, batch):
+        return model.prefill(cfg, params, batch, sc=sc)
+
+    return Cell(name=f"{cfg.name}:{shape.name}", fn=fn,
+                args=(aparams, abatch),
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(None, cache_sh, None))
+
+
+def decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                rules=INFER_RULES) -> Cell:
+    sc = ShardCtx(mesh, rules)
+    model = get_model(cfg)
+    aparams = model.abstract(cfg)
+    params_sh = sc.tree(aparams, model.logical(cfg))
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.enc_dec:
+        acache = whisper_mod.abstract_cache(cfg, B, S, S)
+        cache_sh = sc.tree(acache, whisper_mod.cache_logical(cfg))
+    else:
+        acache = lm_mod.abstract_cache(cfg, B, S)
+        cache_sh = sc.tree(acache, lm_mod.cache_logical(cfg))
+    atok = SDS((B,), jnp.int32)
+    aklen = SDS((B,), jnp.int32)
+    tok_sh = sc.leaf(atok, ("batch",))
+
+    def fn(params, cache, token, k_len):
+        return model.decode_step(cfg, params, cache, token, k_len, sc=sc)
+
+    return Cell(name=f"{cfg.name}:{shape.name}", fn=fn,
+                args=(aparams, acache, atok, aklen),
+                in_shardings=(params_sh, cache_sh, tok_sh, tok_sh),
+                out_shardings=(None, cache_sh),
+                donate=(1,))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               rules_version: str = "v1", **kw) -> Cell:
+    rules = pick_rules(cfg, shape.kind, rules_version)
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh, rules=rules, **kw)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh, rules=rules)
+    return decode_cell(cfg, shape, mesh, rules=rules)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Public ShapeDtypeStruct view of one cell's model inputs."""
+    if shape.kind in ("train", "prefill"):
+        return batch_specs(cfg, shape)[0]
+    B, S = shape.global_batch, shape.seq_len
+    cache = (whisper_mod.abstract_cache(cfg, B, S, S) if cfg.enc_dec
+             else lm_mod.abstract_cache(cfg, B, S))
+    return {"token": SDS((B,), jnp.int32), "k_len": SDS((B,), jnp.int32),
+            "cache": cache}

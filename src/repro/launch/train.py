@@ -1,0 +1,99 @@
+"""Training launcher: mesh-aware, checkpointed, preemption-tolerant.
+
+On the CPU container this runs reduced configs end-to-end (the lm_train
+example uses it); on a real fleet the same driver runs the full configs —
+the only difference is the mesh passed in.  Resume-from-latest is
+automatic: a fresh process picks up at the last valid atomic checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint, configs
+from repro.data import LMBatcher
+from repro.launch.mesh import make_host_mesh
+from repro.launch.shardctx import ShardCtx
+from repro.launch.specs import LLAVA_PATCHES
+from repro.optim import AdamWConfig, cosine_with_warmup
+from repro.sharding import TRAIN_RULES
+from repro import train as train_mod
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
+               ckpt_dir=None, ckpt_every: int = 50, mesh=None,
+               opt_cfg=None, log_every: int = 10, seed: int = 0,
+               on_metrics=None):
+    mesh = mesh or make_host_mesh()
+    sc = ShardCtx(mesh, TRAIN_RULES)
+    opt_cfg = opt_cfg or AdamWConfig(weight_decay=0.01)
+    lr_fn = cosine_with_warmup(lr, max(steps // 20, 5), steps)
+
+    state = train_mod.make_state(cfg, opt_cfg, jax.random.PRNGKey(seed))
+    start = 0
+    if ckpt_dir:
+        restored, at = checkpoint.restore_latest(ckpt_dir, state)
+        if restored is not None:
+            state, start = restored, at
+            print(f"resumed from step {at}", flush=True)
+
+    step_fn = jax.jit(train_mod.make_train_step(cfg, opt_cfg, lr_fn, sc=sc),
+                      donate_argnums=(0,))
+    prefix = (min(LLAVA_PATCHES, seq // 2) if cfg.frontend == "vlm"
+              else (seq if cfg.frontend == "audio" else 0))
+    data = iter(LMBatcher(
+        vocab=cfg.vocab_size, batch=batch,
+        seq=(seq - prefix) if cfg.frontend == "vlm" else seq, seed=seed,
+        frontend=cfg.frontend, d_model=cfg.d_model, prefix=prefix))
+
+    stop = {"now": False}
+
+    def _sigterm(signum, frame):   # checkpoint-on-preemption
+        stop["now"] = True
+    old = signal.signal(signal.SIGTERM, _sigterm)
+
+    metrics = {}
+    t0 = time.time()
+    try:
+        for i in range(start, steps):
+            b = {k: jnp.asarray(v) for k, v in next(data).items()}
+            state, metrics = step_fn(state, b)
+            if (i + 1) % log_every == 0 or i == start:
+                loss = float(metrics["loss"])
+                print(f"step {i + 1:5d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f} "
+                      f"({(time.time() - t0):.1f}s)", flush=True)
+                if on_metrics:
+                    on_metrics(i + 1, metrics)
+            if ckpt_dir and ((i + 1) % ckpt_every == 0 or stop["now"]):
+                checkpoint.save(ckpt_dir, i + 1, state)
+            if stop["now"]:
+                print("preemption checkpoint written; exiting", flush=True)
+                break
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    return state, metrics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir")
+    args = ap.parse_args()
+    cfg = configs.get(args.arch, reduced=args.reduced)
+    train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+               lr=args.lr, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo: a generic LM engine + whisper enc-dec, dispatched by config.
+
+``get_model(cfg)`` returns a module-like namespace with a uniform API:
+init / abstract / logical / forward / prefill / decode_step / cache fns.
+"""
+from __future__ import annotations
+
+from . import lm, whisper, params, layers, mixers, moe  # noqa: F401
+
+
+def get_model(cfg):
+    return whisper if cfg.enc_dec else lm

@@ -1,0 +1,298 @@
+"""Shared neural building blocks (pure JAX, functional).
+
+Attention uses a *blockwise online-softmax* schedule with a statically
+pruned block list: for causal masks only the lower-triangular (q-block,
+k-block) pairs are emitted, and a sliding window prunes to a block band —
+the same fixed-banding search-space pruning the paper applies to DP
+matrices (§2.2.4), here applied to the attention score matrix.  On real
+TPU this function is the natural target for a Pallas flash kernel; the
+pure-JAX version defines identical FLOP/byte roofline terms.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamDef
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_defs(cfg, dim: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": ParamDef((dim,), (None,), init="ones")}
+    if cfg.norm == "layernorm":
+        return {"scale": ParamDef((dim,), (None,), init="ones"),
+                "bias": ParamDef((dim,), (None,), init="zeros")}
+    if cfg.norm == "layernorm_np":      # olmo: non-parametric
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def norm_apply(cfg, p, x):
+    xf = x.astype(F32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        return (xf * p["scale"].astype(F32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    if cfg.norm == "layernorm":
+        xf = xf * p["scale"].astype(F32) + p["bias"].astype(F32)
+    return xf.astype(x.dtype)
+
+
+def rms_head_norm(scale, x):
+    """Per-head q/k RMSNorm over the head_dim axis (qwen3 / command-r)."""
+    xf = x.astype(F32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (xf * scale.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (NeoX half-split convention)
+# ---------------------------------------------------------------------------
+def rope_apply(x, positions, theta: float, rope_dim: Optional[int] = None):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rd = rope_dim or hd
+    half = rd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freqs          # (..., S, half)
+    sin = jnp.sin(ang)[..., None, :]                        # (..., S, 1, half)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:rd]
+    xr = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return jnp.concatenate([xr, x[..., rd:]], -1).astype(x.dtype) \
+        if rd < hd else xr.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise online-softmax attention with static block pruning
+# ---------------------------------------------------------------------------
+def _block_pairs(nq, nk, chunk, causal, window, q_start):
+    """Static (q-block, k-block) pair list; prunes above-diagonal blocks for
+    causal masks and out-of-band blocks for sliding windows."""
+    pairs = []
+    for qi in range(nq):
+        q_lo = q_start + qi * chunk
+        q_hi = q_lo + chunk - 1
+        for kj in range(nk):
+            k_lo, k_hi = kj * chunk, kj * chunk + chunk - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi <= q_lo - window:
+                continue
+            pairs.append((qi, kj))
+    return pairs
+
+
+def _block_mask(chunk, qi, kj, q_start, causal, window, k_len):
+    qpos = q_start + qi * chunk + jax.lax.iota(jnp.int32, chunk)
+    kpos = kj * chunk + jax.lax.iota(jnp.int32, chunk)
+    mask = jnp.ones((chunk, chunk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if k_len is not None:
+        mask &= (kpos < k_len)[None, :]
+    return mask
+
+
+def _flash_fwd(cfgt, q, k, v):
+    """-> (out (B,Sq,K,G,hdv) f32, lse (B,Sq,K,G) f32)."""
+    causal, window, chunk, q_start, k_len, scale, pairs = cfgt
+    B, Sq, K, G, hd = q.shape
+    hd_v = v.shape[-1]
+    acc0 = jnp.zeros((B, Sq, K, G, hd_v), F32)
+    m0 = jnp.full((B, Sq, K, G), NEG_INF, F32)
+    l0 = jnp.zeros((B, Sq, K, G), F32)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        qi, kj = pair[0], pair[1]
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * chunk, chunk, 1)
+        kb = jax.lax.dynamic_slice_in_dim(k, kj * chunk, chunk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, kj * chunk, chunk, 1)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qb, kb,
+                       preferred_element_type=F32) * scale
+        mask = _block_mask(chunk, qi, kj, q_start, causal, window, k_len)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        mb = jax.lax.dynamic_slice_in_dim(m, qi * chunk, chunk, 1)
+        lb = jax.lax.dynamic_slice_in_dim(l, qi * chunk, chunk, 1)
+        ab = jax.lax.dynamic_slice_in_dim(acc, qi * chunk, chunk, 1)
+        new_m = jnp.maximum(mb, jnp.max(s, axis=-1))
+        alpha = jnp.exp(mb - new_m)
+        p = jnp.exp(s - new_m[..., None])
+        lb = lb * alpha + jnp.sum(p, -1)
+        ab = ab * alpha[..., None] + jnp.einsum(
+            "bqkgs,bskd->bqkgd", p.astype(v.dtype), vb,
+            preferred_element_type=F32)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, ab, qi * chunk, 1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, new_m, qi * chunk, 1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, lb, qi * chunk, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  jnp.asarray(pairs, jnp.int32))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_core(cfgt, q, k, v):
+    return _flash_fwd(cfgt, q, k, v)[0]
+
+
+def _flash_core_fwd(cfgt, q, k, v):
+    out, lse = _flash_fwd(cfgt, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(cfgt, res, dout):
+    """Recompute-based flash backward: no per-step carry stacking — this is
+    what keeps train-mode attention memory at O(B*S*D) instead of
+    O(B*S*D*n_blocks) (see EXPERIMENTS.md §Perf iteration 1)."""
+    causal, window, chunk, q_start, k_len, scale, pairs = cfgt
+    q, k, v, out, lse = res
+    dout = dout.astype(F32)
+    delta = jnp.sum(dout * out, axis=-1)                  # (B,Sq,K,G)
+    dq0 = jnp.zeros(q.shape, F32)
+    dk0 = jnp.zeros(k.shape, F32)
+    dv0 = jnp.zeros(v.shape, F32)
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        qi, kj = pair[0], pair[1]
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * chunk, chunk, 1)
+        kb = jax.lax.dynamic_slice_in_dim(k, kj * chunk, chunk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, kj * chunk, chunk, 1)
+        ob = jax.lax.dynamic_slice_in_dim(dout, qi * chunk, chunk, 1)
+        lseb = jax.lax.dynamic_slice_in_dim(lse, qi * chunk, chunk, 1)
+        db = jax.lax.dynamic_slice_in_dim(delta, qi * chunk, chunk, 1)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qb, kb,
+                       preferred_element_type=F32) * scale
+        mask = _block_mask(chunk, qi, kj, q_start, causal, window, k_len)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lseb[..., None])                  # (B,cq,K,G,ck)
+        dvb = jnp.einsum("bqkgs,bqkgd->bskd", p, ob)
+        dp = jnp.einsum("bqkgd,bskd->bqkgs", ob, vb.astype(F32))
+        ds = p * (dp - db[..., None]) * scale
+        dqb = jnp.einsum("bqkgs,bskd->bqkgd", ds, kb.astype(F32))
+        dkb = jnp.einsum("bqkgs,bqkgd->bskd", ds, qb.astype(F32))
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, qi * chunk, chunk, 1)
+            + dqb, qi * chunk, 1)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, kj * chunk, chunk, 1)
+            + dkb, kj * chunk, 1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, kj * chunk, chunk, 1)
+            + dvb, kj * chunk, 1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0),
+                                   jnp.asarray(pairs, jnp.int32))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: Optional[int],
+                    chunk: int, q_start: int = 0, k_len=None,
+                    scale: Optional[float] = None):
+    """q: (B, Sq, H, hd), k/v: (B, Sk, K, hd) with H = K * G (GQA).
+
+    ``q_start``: absolute position of q[0] (prefix handling for blockwise
+    causal masks).  ``k_len``: effective key length, static (mask beyond).
+    Returns (B, Sq, H, hd_v).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]                 # MLA: value dim != query/key dim
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    chunk = min(chunk, Sq, Sk)
+    sq_orig = Sq
+    if Sq % chunk or Sk % chunk:       # pad to block multiples, mask keys
+        pq, pk = (-Sq) % chunk, (-Sk) % chunk
+        if k_len is None:
+            k_len = Sk
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        Sq, Sk = Sq + pq, Sk + pk
+    nq, nk = Sq // chunk, Sk // chunk
+    pairs = tuple(_block_pairs(nq, nk, chunk, causal, window, q_start))
+    cfgt = (causal, window, chunk, q_start, k_len, scale, pairs)
+    out = _flash_core(cfgt, q.reshape(B, Sq, K, G, hd), k, v)
+    out = out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+    return out[:, :sq_orig] if sq_orig != Sq else out
+
+
+def decode_attention(q, k_cache, v_cache, *, k_len, window=None,
+                     slot_pos=None, scale=None):
+    """Single-position attention over a (possibly ring-buffer) KV cache.
+
+    q: (B, 1, H, hd); k/v_cache: (B, S, K, hd); ``k_len``: tokens valid
+    (scalar or (B,)); ``slot_pos``: (B, S) absolute position per ring slot
+    (window caches); returns (B, 1, H, hd).
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=F32) * scale
+    k_len = jnp.asarray(k_len)
+    k_len_b = jnp.broadcast_to(k_len.reshape(-1, *([1] * 0)), (B,)) \
+        if k_len.ndim <= 1 else k_len
+    if slot_pos is not None:       # ring buffer: valid slots carry pos >= 0
+        valid = slot_pos >= 0
+        if window is not None:     # query position is k_len - 1
+            valid &= slot_pos[:, :] > (k_len_b[:, None] - 1 - window)
+    else:
+        valid = jax.lax.iota(jnp.int32, S)[None, :] < k_len_b[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+def mlp_defs(cfg, d_ff: Optional[int] = None):
+    D, FF = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": ParamDef((D, FF), ("embed", "mlp"), init="fan_in"),
+                "w_up": ParamDef((D, FF), ("embed", "mlp"), init="fan_in"),
+                "w_down": ParamDef((FF, D), ("mlp", "embed"), init="fan_in")}
+    return {"w_up": ParamDef((D, FF), ("embed", "mlp"), init="fan_in"),
+            "w_down": ParamDef((FF, D), ("mlp", "embed"), init="fan_in")}
+
+
+def mlp_apply(cfg, p, x):
+    dt = x.dtype
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return (h @ p["w_down"]).astype(dt)

@@ -1,0 +1,401 @@
+"""Generic decoder-only LM over the mixer/FFN zoo.
+
+A config's ``layer_plan()`` decomposes the stack into scan groups; each
+group lowers to one ``lax.scan`` over stacked layer params (small HLO —
+the 80-cell dry-run matrix depends on this).  Three modes share one code
+path: 'train' (full-sequence logits), 'prefill' (last-position logits +
+built KV/state cache), 'decode' (one token against a cache).
+
+Activation sharding is injected through ``ctx['sc']`` — a callable
+``(x, logical_axes) -> x`` installed by the launch layer (no-op when
+running unsharded smoke tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import mixers, moe
+from .layers import F32, mlp_apply, mlp_defs, norm_apply, norm_defs
+from .params import (ParamDef, abstract_params, init_params, logical_tree,
+                     stack_defs)
+
+P = ParamDef
+
+_MIXER_DEFS = {
+    "attn": mixers.attn_defs,
+    "attn_local": mixers.attn_defs,
+    "mla": mixers.mla_defs,
+    "rglru": mixers.rglru_defs,
+    "rwkv6": mixers.rwkv6_defs,
+}
+
+
+def _mixer_apply(cfg, kind, p, x, ctx, cache):
+    if kind == "attn":
+        return mixers.attn_apply(cfg, p, x, ctx, cache, window=None)
+    if kind == "attn_local":
+        return mixers.attn_apply(cfg, p, x, ctx, cache, window=cfg.window)
+    if kind == "mla":
+        return mixers.mla_apply(cfg, p, x, ctx, cache)
+    if kind == "rglru":
+        return mixers.rglru_apply(cfg, p, x, ctx, cache)
+    if kind == "rwkv6":
+        return mixers.rwkv6_apply(cfg, p, x, ctx, cache)
+    raise ValueError(kind)
+
+
+def _ffn_defs(cfg, kind):
+    if kind == "dense":
+        return mlp_defs(cfg)
+    if kind == "moe":
+        return moe.moe_defs(cfg)
+    if kind == "rwkv_cm":
+        return mixers.rwkv_cm_defs(cfg)
+    raise ValueError(kind)
+
+
+def _ffn_apply(cfg, kind, p, x, ctx, cache):
+    """-> (y, new_cache, aux)."""
+    if kind == "dense":
+        return mlp_apply(cfg, p, x), None, 0.0
+    if kind == "moe":
+        y, aux = moe.moe_apply(cfg, p, x)
+        return y, None, aux
+    if kind == "rwkv_cm":
+        y, nc = mixers.rwkv_cm_apply(cfg, p, x, ctx, cache)
+        return y, nc, 0.0
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Layer / period / group
+# ---------------------------------------------------------------------------
+def _layer_defs(cfg, kind, ffn_kind):
+    d = {"norm1": norm_defs(cfg, cfg.d_model),
+         "mixer": _MIXER_DEFS[kind](cfg),
+         "ffn": _ffn_defs(cfg, ffn_kind)}
+    if not cfg.parallel_block:
+        d["norm2"] = norm_defs(cfg, cfg.d_model)
+    return d
+
+
+def _layer_apply(cfg, kind, ffn_kind, p, x, ctx, cache):
+    sc = ctx["sc"]
+    cache = cache or {}
+    if cfg.parallel_block:
+        h = norm_apply(cfg, p["norm1"], x)
+        ym, mc = _mixer_apply(cfg, kind, p["mixer"], h, ctx,
+                              cache.get("mixer"))
+        yf, fc, aux = _ffn_apply(cfg, ffn_kind, p["ffn"], h, ctx,
+                                 cache.get("ffn"))
+        x = sc(x + ym + yf, ("batch", None, "embed"))
+    else:
+        ym, mc = _mixer_apply(cfg, kind, p["mixer"],
+                              norm_apply(cfg, p["norm1"], x), ctx,
+                              cache.get("mixer"))
+        x = sc(x + ym, ("batch", None, "embed"))
+        yf, fc, aux = _ffn_apply(cfg, ffn_kind, p["ffn"],
+                                 norm_apply(cfg, p["norm2"], x), ctx,
+                                 cache.get("ffn"))
+        x = sc(x + yf, ("batch", None, "embed"))
+    return x, {"mixer": mc, "ffn": fc}, aux
+
+
+def _period_defs(cfg, mixers_t, ffn_kind):
+    return {f"sub{t}": _layer_defs(cfg, k, ffn_kind)
+            for t, k in enumerate(mixers_t)}
+
+
+def _period_apply(cfg, mixers_t, ffn_kind, p, x, ctx, cache):
+    ncs, aux = {}, 0.0
+    for t, k in enumerate(mixers_t):
+        x, nc, a = _layer_apply(cfg, k, ffn_kind, p[f"sub{t}"], x, ctx,
+                                (cache or {}).get(f"sub{t}"))
+        ncs[f"sub{t}"] = nc
+        aux = aux + a
+    return x, ncs, aux
+
+
+def _group_apply(cfg, plan_entry, p_group, x, ctx, cache_group):
+    mixers_t, ffn_kind, repeat = plan_entry
+    mode = ctx["mode"]
+    # ctx carries non-array entries (mode string, sharding hook); it is
+    # captured by closure so jax.checkpoint / scan only see array pytrees.
+    if mode == "train":
+        def period_train(pp, xc):
+            xo, _, aux = _period_apply(cfg, mixers_t, ffn_kind, pp, xc, ctx,
+                                       None)
+            return xo, jnp.asarray(aux, F32)
+        if cfg.remat:
+            period_train = jax.checkpoint(period_train)
+
+        def body(xc, pp):
+            return period_train(pp, xc)
+        x, auxs = jax.lax.scan(body, x, p_group)
+        return x, None, jnp.sum(auxs)
+    if mode == "prefill":
+        def body(xc, pp):
+            xo, nc, aux = _period_apply(cfg, mixers_t, ffn_kind, pp, xc, ctx,
+                                        None)
+            return xo, (nc, jnp.asarray(aux, F32))
+        x, (ncs, auxs) = jax.lax.scan(body, x, p_group)
+        return x, ncs, jnp.sum(auxs)
+    # decode
+    def body(xc, inp):
+        pp, cc = inp
+        xo, nc, aux = _period_apply(cfg, mixers_t, ffn_kind, pp, xc, ctx, cc)
+        return xo, (nc, jnp.asarray(aux, F32))
+    x, (ncs, auxs) = jax.lax.scan(body, x, (p_group, cache_group))
+    return x, ncs, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parameter definitions
+# ---------------------------------------------------------------------------
+def param_defs(cfg) -> Dict[str, Any]:
+    V, D = cfg.vocab_eff, cfg.d_model
+    defs = {"embed": {"table": P((V, D), ("vocab", "embed"))}}
+    groups = []
+    for mixers_t, ffn_kind, repeat in cfg.layer_plan():
+        groups.append(stack_defs(_period_defs(cfg, mixers_t, ffn_kind),
+                                 repeat))
+    defs["groups"] = tuple(groups)
+    defs["final_norm"] = norm_defs(cfg, D)
+    if not cfg.tie_embeddings:
+        defs["head"] = {"w": P((D, V), ("embed", "vocab"), init="fan_in")}
+    if cfg.mtp:
+        defs["mtp"] = {
+            "norm_h": norm_defs(cfg, D),
+            "norm_e": norm_defs(cfg, D),
+            "proj": P((2 * D, D), (None, "embed"), init="fan_in"),
+            "block": _layer_defs(cfg, cfg.pattern[0],
+                                 "dense" if cfg.first_dense else
+                                 ("moe" if cfg.n_experts else "dense")),
+        }
+    return defs
+
+
+def init(cfg, key):
+    return init_params(key, param_defs(cfg), cfg.param_dtype)
+
+
+def abstract(cfg):
+    return abstract_params(param_defs(cfg), cfg.param_dtype)
+
+
+def logical(cfg):
+    return logical_tree(param_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _assemble_input(cfg, params, batch, sc):
+    """tokens (+ optional multimodal prefix embeds) -> (x, tokens, prefix)."""
+    table = params["embed"]["table"]
+    dt = jnp.dtype(cfg.compute_dtype)
+    parts = []
+    prefix = 0
+    if "prefix_embeds" in batch:           # llava patch / whisper-free path
+        pe = batch["prefix_embeds"].astype(dt)
+        parts.append(pe)
+        prefix = pe.shape[1]
+    tokens = batch.get("tokens")
+    if tokens is not None:
+        parts.append(jnp.take(table, tokens, axis=0).astype(dt))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return sc(x, ("batch", None, "embed")), tokens, prefix
+
+
+def _head(cfg, params, x):
+    table = params["embed"]["table"]
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, table,
+                          preferred_element_type=F32)
+    return jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                      preferred_element_type=F32)
+
+
+def forward(cfg, params, batch, sc=None):
+    """Train-mode forward: full-sequence f32 logits + aux dict."""
+    sc = sc or (lambda x, _: x)
+    x, tokens, prefix = _assemble_input(cfg, params, batch, sc)
+    B, S = x.shape[:2]
+    ctx = {"mode": "train", "sc": sc,
+           "positions": jnp.arange(S, dtype=jnp.int32)[None, :]}
+    aux = 0.0
+    for plan_entry, pg in zip(cfg.layer_plan(), params["groups"]):
+        x, _, a = _group_apply(cfg, plan_entry, pg, x, ctx, None)
+        aux = aux + a
+    h = norm_apply(cfg, params["final_norm"], x)
+    logits = sc(_head(cfg, params, h), ("batch", None, "vocab"))
+    out = {"logits": logits, "aux_loss": aux, "prefix": prefix}
+    if cfg.mtp and tokens is not None:
+        out["mtp_logits"] = _mtp_logits(cfg, params, h, tokens, ctx, prefix)
+    return out
+
+
+def _mtp_logits(cfg, params, h, tokens, ctx, prefix):
+    """DeepSeek-style depth-1 multi-token prediction head.
+
+    Combines the trunk state at position t with the embedding of token
+    t+1 to predict token t+2; shares the output head with the trunk.
+    """
+    mp = params["mtp"]
+    table = params["embed"]["table"]
+    dt = jnp.dtype(cfg.compute_dtype)
+    ht = h[:, prefix:-1]                               # states for t
+    emb = jnp.take(table, tokens[:, 1:], axis=0).astype(dt)   # token t+1
+    z = jnp.concatenate([norm_apply(cfg, mp["norm_h"], ht),
+                         norm_apply(cfg, mp["norm_e"], emb)], -1) @ mp["proj"]
+    mctx = dict(ctx)
+    mctx["positions"] = jnp.arange(z.shape[1], dtype=jnp.int32)[None, :]
+    ffn_kind = "dense" if (cfg.first_dense or not cfg.n_experts) else "moe"
+    z, _, _ = _layer_apply(cfg, cfg.pattern[0], ffn_kind, mp["block"], z,
+                           mctx, None)
+    return _head(cfg, params, z)
+
+
+def prefill(cfg, params, batch, sc=None):
+    """-> (last-position logits (B, V), cache, k_len (B,))."""
+    sc = sc or (lambda x, _: x)
+    x, tokens, prefix = _assemble_input(cfg, params, batch, sc)
+    B, S = x.shape[:2]
+    ctx = {"mode": "prefill", "sc": sc,
+           "positions": jnp.arange(S, dtype=jnp.int32)[None, :]}
+    caches = []
+    for plan_entry, pg in zip(cfg.layer_plan(), params["groups"]):
+        x, nc, _ = _group_apply(cfg, plan_entry, pg, x, ctx, None)
+        caches.append(nc)
+    h = norm_apply(cfg, params["final_norm"], x[:, -1:])
+    logits = _head(cfg, params, h)[:, 0]
+    return logits, tuple(caches), jnp.full((B,), S, jnp.int32)
+
+
+def decode_step(cfg, params, cache, token, k_len, sc=None):
+    """token: (B,) int32; k_len: (B,) valid cache length.
+    -> (logits (B, V), new_cache)."""
+    sc = sc or (lambda x, _: x)
+    table = params["embed"]["table"]
+    x = jnp.take(table, token[:, None], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    ctx = {"mode": "decode", "sc": sc, "k_len": k_len,
+           "positions": k_len[:, None]}
+    new_caches = []
+    for plan_entry, pg, cg in zip(cfg.layer_plan(), params["groups"], cache):
+        x, nc, _ = _group_apply(cfg, plan_entry, pg, x, ctx, cg)
+        new_caches.append(nc)
+    h = norm_apply(cfg, params["final_norm"], x)
+    logits = _head(cfg, params, h)[:, 0]
+    return logits, tuple(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Cache constructors (zeros / abstract) — layout must match prefill output
+# ---------------------------------------------------------------------------
+def _mixer_cache_spec(cfg, kind, B, S):
+    dt = jnp.dtype(cfg.compute_dtype)
+    K, hd = cfg.n_kv_eff, cfg.head_dim
+    if kind == "attn":
+        return {"k": ((B, S, K, hd), dt), "v": ((B, S, K, hd), dt)}
+    if kind == "attn_local":
+        W = min(cfg.window, S)
+        return {"k": ((B, W, K, hd), dt), "v": ((B, W, K, hd), dt),
+                "slot_pos": ((B, W), jnp.int32)}
+    if kind == "mla":
+        return {"ckv": ((B, S, cfg.kv_lora), dt),
+                "krope": ((B, S, cfg.rope_dim), dt)}
+    if kind == "rglru":
+        W = cfg.lru_width
+        return {"h": ((B, W), F32), "conv": ((B, cfg.conv_width - 1, W), dt)}
+    if kind == "rwkv6":
+        H = cfg.rwkv_heads
+        return {"state": ((B, H, hd, hd), F32), "shift": ((B, cfg.d_model), dt)}
+    raise ValueError(kind)
+
+
+def cache_spec(cfg, B, S):
+    """Nested ((shape, dtype)) tree matching the prefill cache layout."""
+    groups = []
+    for mixers_t, ffn_kind, repeat in cfg.layer_plan():
+        period = {}
+        for t, k in enumerate(mixers_t):
+            entry = {"mixer": _mixer_cache_spec(cfg, k, B, S),
+                     "ffn": ({"shift": ((B, cfg.d_model),
+                                        jnp.dtype(cfg.compute_dtype))}
+                             if ffn_kind == "rwkv_cm" else None)}
+            period[f"sub{t}"] = entry
+        groups.append(jax.tree.map(
+            lambda sd: ((repeat,) + sd[0], sd[1]), period,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple)))
+    return tuple(groups)
+
+
+def _materialize_cache(spec, make):
+    is_sd = lambda x: (isinstance(x, tuple) and len(x) == 2
+                       and isinstance(x[0], tuple))
+    return jax.tree.map(lambda sd: make(sd[0], sd[1]), spec, is_leaf=is_sd)
+
+
+def init_cache(cfg, B, S):
+    return _materialize_cache(cache_spec(cfg, B, S),
+                              lambda s, d: jnp.zeros(s, d))
+
+
+def abstract_cache(cfg, B, S):
+    return _materialize_cache(cache_spec(cfg, B, S),
+                              lambda s, d: jax.ShapeDtypeStruct(s, d))
+
+
+def grow_cache(cfg, cache, B, new_len):
+    """Pad a prefill-built cache to a larger decode capacity.
+
+    Leaf-by-leaf against ``cache_spec(cfg, B, new_len)``: any dim smaller
+    than its target is zero-padded at the end (full-attention / MLA seq
+    dims; ring/state caches are already capacity-fixed and pass through).
+    """
+    target = _materialize_cache(cache_spec(cfg, B, new_len),
+                                lambda s, d: s)
+
+    def g(x, tgt):
+        if x.shape == tuple(tgt):
+            return x
+        pad = [(0, t - s) for s, t in zip(x.shape, tgt)]
+        assert all(p[1] >= 0 for p in pad), (x.shape, tgt)
+        return jnp.pad(x, pad)
+    return jax.tree.map(g, cache, tuple(target))
+
+
+_MIXER_CACHE_LOGICAL = {
+    "attn": {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+             "v": ("batch", "cache_seq", "kv_heads", "head_dim")},
+    "attn_local": {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+                   "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+                   "slot_pos": ("batch", None)},
+    "mla": {"ckv": ("batch", "cache_seq", None),
+            "krope": ("batch", "cache_seq", None)},
+    "rglru": {"h": ("batch", "lru"), "conv": ("batch", None, "lru")},
+    "rwkv6": {"state": ("batch", "heads", None, None),
+              "shift": ("batch", None)},
+}
+
+
+def cache_logical(cfg):
+    """Logical axes for cache tensors, parallel to ``cache_spec``."""
+    groups = []
+    for mixers_t, ffn_kind, repeat in cfg.layer_plan():
+        period = {}
+        for t, k in enumerate(mixers_t):
+            entry = {"mixer": jax.tree.map(
+                lambda ax: ("layers",) + ax, _MIXER_CACHE_LOGICAL[k],
+                is_leaf=lambda x: isinstance(x, tuple)),
+                "ffn": ({"shift": ("layers", "batch", None)}
+                        if ffn_kind == "rwkv_cm" else None)}
+            period[f"sub{t}"] = entry
+        groups.append(period)
+    return tuple(groups)

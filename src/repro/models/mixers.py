@@ -1,0 +1,445 @@
+"""Temporal-mixing sublayers: GQA attention, MLA, RG-LRU, WKV6.
+
+Every mixer exposes ``<kind>_defs(cfg)`` and
+``<kind>_apply(cfg, p, x, ctx, cache) -> (y, new_cache)``.
+
+``ctx`` keys: mode ('train'|'prefill'|'decode'), positions, k_len
+(decode: valid cache length per batch row), window.
+
+The two recurrent mixers (RG-LRU, WKV6) run the paper's chunked-wavefront
+discipline in 1-D: block-local compute with a carried boundary state — the
+JAX analogue of DP-HLS's preserved row score buffer (DESIGN.md §2/§4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (F32, NEG_INF, decode_attention, flash_attention,
+                     rms_head_norm, rope_apply)
+from .params import ParamDef
+
+P = ParamDef
+
+
+# ===========================================================================
+# GQA attention (kinds: 'attn' full-causal, 'attn_local' sliding window,
+# 'enc' bidirectional, 'cross' encoder-decoder)
+# ===========================================================================
+def attn_defs(cfg):
+    D, H, K, hd = cfg.d_model, cfg.n_heads_eff, cfg.n_kv_eff, cfg.head_dim
+    d = {"wq": P((D, H, hd), ("embed", "heads", "head_dim"), init="fan_in"),
+         "wk": P((D, K, hd), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+         "wv": P((D, K, hd), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+         "wo": P((H, hd, D), ("heads", "head_dim", "embed"), init="fan_in")}
+    if cfg.qk_norm:
+        d["q_norm"] = P((hd,), (None,), init="ones")
+        d["k_norm"] = P((hd,), (None,), init="ones")
+    return d
+
+
+def _qkv(cfg, p, x, x_kv=None):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"])
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def attn_apply(cfg, p, x, ctx, cache, *, window=None, causal=True):
+    mode = ctx["mode"]
+    if mode == "decode":
+        return _attn_decode(cfg, p, x, ctx, cache, window)
+    q, k, v = _qkv(cfg, p, x)
+    pos = ctx["positions"]
+    if cfg.positional == "rope":
+        q = rope_apply(q, pos, cfg.rope_theta)
+        k = rope_apply(k, pos, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        chunk=cfg.attn_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    new_cache = None
+    if mode == "prefill":
+        if window is None:
+            new_cache = {"k": k, "v": v}
+        else:  # ring buffer holding the trailing window; slot = pos % W
+            W = min(window, k.shape[1])
+            S = k.shape[1]
+            shift = (S - W) % W
+            new_cache = {
+                "k": jnp.roll(k[:, S - W:], shift, axis=1),
+                "v": jnp.roll(v[:, S - W:], shift, axis=1),
+                "slot_pos": jnp.broadcast_to(
+                    jnp.roll(jnp.arange(S - W, S, dtype=jnp.int32), shift)[
+                        None], (k.shape[0], W))}
+    return y, new_cache
+
+
+def _attn_decode(cfg, p, x, ctx, cache, window):
+    """x: (B, 1, D); cache k/v: (B, S, K, hd) (ring when window)."""
+    B = x.shape[0]
+    k_len = ctx["k_len"]                       # (B,) tokens already cached
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.positional == "rope":
+        pos = k_len[:, None]
+        q = rope_apply(q, pos, cfg.rope_theta)
+        k = rope_apply(k, pos, cfg.rope_theta)
+    if window is None:
+        slot = k_len                           # append at k_len
+        kc = _scatter_time(cache["k"], k, slot)
+        vc = _scatter_time(cache["v"], v, slot)
+        new_cache = {"k": kc, "v": vc}
+        o = decode_attention(q, kc, vc, k_len=k_len + 1)
+    else:
+        W = cache["k"].shape[1]
+        slot = k_len % W
+        kc = _scatter_time(cache["k"], k, slot)
+        vc = _scatter_time(cache["v"], v, slot)
+        sp = _scatter_time(cache["slot_pos"][..., None], k_len[:, None, None],
+                           slot)[..., 0]
+        new_cache = {"k": kc, "v": vc, "slot_pos": sp}
+        o = decode_attention(q, kc, vc, k_len=k_len + 1, window=window,
+                             slot_pos=sp)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return y, new_cache
+
+
+def _scatter_time(cache, new, idx):
+    """cache: (B, S, ...); new: (B, 1, ...); idx: (B,) time slot per row."""
+    B, S = cache.shape[:2]
+    onehot = jax.nn.one_hot(idx, S, dtype=cache.dtype)     # (B, S)
+    oh = onehot.reshape((B, S) + (1,) * (cache.ndim - 2))
+    return cache * (1 - oh) + oh * new
+
+
+# ===========================================================================
+# MLA — DeepSeek multi-head latent attention
+# ===========================================================================
+def mla_defs(cfg):
+    D, H, hd = cfg.d_model, cfg.n_heads_eff, cfg.head_dim
+    ql, kl, rd = cfg.q_lora, cfg.kv_lora, cfg.rope_dim
+    return {
+        "wdq": P((D, ql), ("embed", "q_lora"), init="fan_in"),
+        "q_norm": P((ql,), (None,), init="ones"),
+        "wuq": P((ql, H, hd + rd), ("q_lora", "heads", None), init="fan_in"),
+        "wdkv": P((D, kl + rd), ("embed", None), init="fan_in"),
+        "kv_norm": P((kl,), (None,), init="ones"),
+        "wuk": P((kl, H, hd), (None, "heads", "head_dim"), init="fan_in"),
+        "wuv": P((kl, H, hd), (None, "heads", "head_dim"), init="fan_in"),
+        "wo": P((H, hd, D), ("heads", "head_dim", "embed"), init="fan_in"),
+    }
+
+
+def _rms(x, scale):
+    xf = x.astype(F32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (xf * scale.astype(F32)).astype(x.dtype)
+
+
+def _mla_qc(cfg, p, x, pos):
+    """Query path + compressed kv latent; shared by all modes."""
+    hd, rd = cfg.head_dim, cfg.rope_dim
+    ql = _rms(x @ p["wdq"], p["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", ql, p["wuq"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope_apply(q_rope, pos, cfg.rope_theta)
+    ckv_full = x @ p["wdkv"]
+    ckv = _rms(ckv_full[..., :cfg.kv_lora], p["kv_norm"])
+    k_rope = rope_apply(ckv_full[..., None, cfg.kv_lora:], pos,
+                        cfg.rope_theta)[..., 0, :]            # (B, S, rd)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_apply(cfg, p, x, ctx, cache, **_):
+    mode = ctx["mode"]
+    hd = cfg.head_dim
+    if mode == "decode":
+        return _mla_decode(cfg, p, x, ctx, cache)
+    q_nope, q_rope, ckv, k_rope = _mla_qc(cfg, p, x, ctx["positions"])
+    # Decompress keys/values for the parallel (train/prefill) pass.
+    k_nope = jnp.einsum("bsl,lhk->bshk", ckv, p["wuk"])
+    v = jnp.einsum("bsl,lhk->bshk", ckv, p["wuv"])
+    H = q_nope.shape[2]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (H, cfg.rope_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], -1)
+    o = flash_attention(q_full, k_full, v, causal=True, window=None,
+                        chunk=cfg.attn_chunk,
+                        scale=1.0 / math.sqrt(hd + cfg.rope_dim))
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    new_cache = {"ckv": ckv, "krope": k_rope} if mode == "prefill" else None
+    return y, new_cache
+
+
+def _mla_decode(cfg, p, x, ctx, cache):
+    """Absorbed-projection decode: the cache stores only the (kv_lora +
+    rope_dim)-wide latent per token — MLA's whole point for serving."""
+    k_len = ctx["k_len"]
+    q_nope, q_rope, ckv_new, krope_new = _mla_qc(cfg, p, x, k_len[:, None])
+    ckv = _scatter_time(cache["ckv"], ckv_new, k_len)
+    krope = _scatter_time(cache["krope"], krope_new, k_len)
+    # absorb W_UK into the query:  q_c = q_nope @ W_UK  -> (B, 1, H, kv_lora)
+    q_c = jnp.einsum("bshk,lhk->bshl", q_nope, p["wuk"])
+    s = (jnp.einsum("bshl,btl->bhst", q_c, ckv, preferred_element_type=F32)
+         + jnp.einsum("bshr,btr->bhst", q_rope, krope,
+                      preferred_element_type=F32))
+    s = s * (1.0 / math.sqrt(cfg.head_dim + cfg.rope_dim))
+    S = ckv.shape[1]
+    valid = jax.lax.iota(jnp.int32, S)[None, :] < (k_len + 1)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhst,btl->bshl", pr.astype(ckv.dtype), ckv,
+                       preferred_element_type=F32).astype(x.dtype)
+    o = jnp.einsum("bshl,lhk->bshk", ctx_c, p["wuv"])   # absorb W_UV
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return y, {"ckv": ckv, "krope": krope}
+
+
+# ===========================================================================
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ===========================================================================
+def rglru_defs(cfg):
+    D, W, CW = cfg.d_model, cfg.lru_width, cfg.conv_width
+    NB = cfg.n_heads                      # block-diagonal gate blocks
+    Wb = W // NB
+    return {
+        "w_x": P((D, W), ("embed", "lru"), init="fan_in"),
+        "w_gate": P((D, W), ("embed", "lru"), init="fan_in"),
+        "conv_w": P((CW, W), (None, "lru"), init="fan_in"),
+        "conv_b": P((W,), ("lru",), init="zeros"),
+        # Block-diagonal recurrence/input gates, as in RecurrentGemma's
+        # BlockDiagonalLinear — and with blocks sharded over 'model' the
+        # gate math is entirely shard-local (no (B,S,W) all-reduce per
+        # layer; §Perf iteration G2).
+        "w_rg": P((NB, Wb, Wb), ("lru", None, None), init="fan_in"),
+        "b_rg": P((W,), ("lru",), init="zeros"),
+        "w_ig": P((NB, Wb, Wb), ("lru", None, None), init="fan_in"),
+        "b_ig": P((W,), ("lru",), init="zeros"),
+        # Λ init so a^8 spans ~(0.9, 0.999) as in the Griffin paper
+        "lam": P((W,), ("lru",), init="ones"),
+        "w_out": P((W, D), ("lru", "embed"), init="fan_in"),
+    }
+
+
+_LRU_C = 8.0
+
+
+def _block_diag(u, w):
+    """u: (..., W) x block-diagonal w: (NB, Wb, Wb) -> (..., W)."""
+    NB, Wb, _ = w.shape
+    ub = u.reshape(u.shape[:-1] + (NB, Wb))
+    return jnp.einsum("...nw,nwv->...nv", ub, w).reshape(u.shape)
+
+
+def _lru_gates(p, u):
+    r = jax.nn.sigmoid(_block_diag(u, p["w_rg"]) + p["b_rg"]).astype(F32)
+    i = jax.nn.sigmoid(_block_diag(u, p["w_ig"]) + p["b_ig"]).astype(F32)
+    log_a = -_LRU_C * r * jax.nn.softplus(p["lam"].astype(F32))
+    return log_a, i
+
+
+def rglru_apply(cfg, p, x, ctx, cache, **_):
+    mode = ctx["mode"]
+    CW = cfg.conv_width
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_x"]
+    if mode == "decode":
+        conv_st = cache["conv"]                       # (B, CW-1, W)
+        hist = jnp.concatenate([conv_st, u], axis=1)  # (B, CW, W)
+        uc = jnp.einsum("bcw,cw->bw", hist, p["conv_w"])[:, None] + p["conv_b"]
+        log_a, i = _lru_gates(p, uc)
+        a = jnp.exp(log_a)
+        b = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) \
+            * (i * uc.astype(F32))
+        h = a[:, 0] * cache["h"] + b[:, 0]            # (B, W) f32 state
+        y = ((h[:, None].astype(x.dtype)) * gate) @ p["w_out"]
+        return y, {"h": h, "conv": hist[:, 1:]}
+    # train / prefill: causal depthwise conv + associative scan
+    uc = sum(jnp.pad(u, ((0, 0), (CW - 1 - k, 0), (0, 0)))[:, :u.shape[1]]
+             * p["conv_w"][k] for k in range(CW)) + p["conv_b"]
+    log_a, i = _lru_gates(p, uc)
+    b = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) \
+        * (i * uc.astype(F32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    y = ((h.astype(x.dtype)) * gate) @ p["w_out"]
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"h": h[:, -1],
+                     "conv": u[:, u.shape[1] - (CW - 1):].astype(u.dtype)}
+    return y, new_cache
+
+
+# ===========================================================================
+# WKV6 (RWKV "Finch") — data-dependent-decay linear attention
+# ===========================================================================
+_TM_LORA = 32
+_DECAY_LORA = 64
+
+
+def rwkv6_defs(cfg):
+    D = cfg.d_model
+    H, hd = cfg.rwkv_heads, cfg.head_dim
+    M = H * hd
+    return {
+        "mu_base": P((D,), (None,), init="zeros"),
+        "mu": P((5, D), (None, None), init="zeros"),        # r,k,v,w,g
+        "tm_a": P((D, 5 * _TM_LORA), ("embed", None), init="fan_in"),
+        "tm_b": P((5, _TM_LORA, D), (None, None, None), init="zeros"),
+        "wr": P((D, M), ("embed", "heads_flat"), init="fan_in"),
+        "wk": P((D, M), ("embed", "heads_flat"), init="fan_in"),
+        "wv": P((D, M), ("embed", "heads_flat"), init="fan_in"),
+        "wg": P((D, M), ("embed", "heads_flat"), init="fan_in"),
+        "w0": P((M,), ("heads_flat",), init="zeros"),
+        "wd_a": P((D, _DECAY_LORA), ("embed", None), init="fan_in"),
+        "wd_b": P((_DECAY_LORA, M), (None, "heads_flat"), init="zeros"),
+        "u": P((H, hd), ("heads", None), init="zeros"),
+        "ln_scale": P((M,), ("heads_flat",), init="ones"),
+        "wo": P((M, D), ("heads_flat", "embed"), init="fan_in"),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """RWKV6 data-dependent token-shift mixing -> (5, B, S, D)."""
+    dx = x_prev - x
+    xx = x + dx * p["mu_base"]
+    lora = jnp.tanh(xx @ p["tm_a"])
+    lora = lora.reshape(lora.shape[:-1] + (5, _TM_LORA))
+    adj = jnp.einsum("bsft,ftd->fbsd", lora, p["tm_b"])
+    mix = p["mu"][:, None, None, :] + adj                 # (5, B, S, D)
+    return x[None] + dx[None] * mix
+
+
+def _wkv_chunk(r, k, v, lw, u, state):
+    """One chunk of the WKV6 recurrence (all f32).
+
+    r/k/v: (c, hd); lw: (c, hd) log-decays (<= 0); u: (hd,) bonus;
+    state: (hd, hd) [k-dim, v-dim].  Exact pairwise log-difference form —
+    safe for any decay magnitude (no exp of positive cumsums).
+    """
+    # f32 math chunk-locally only: full-sequence r/k/v stay bf16 in HBM
+    # (§Perf iteration R2 — the (B,S,H,hd) f32 copies dominated traffic).
+    r, k, v = (t.astype(F32) for t in (r, k, v))
+    lw = lw.astype(F32)
+    c = r.shape[0]
+    L = jnp.cumsum(lw, axis=0)                            # inclusive
+    Lq = L - lw                                           # exclusive
+    # intra-chunk: A[i, j] = sum_d r[i,d] k[j,d] exp(Lq[i,d] - L[j,d]), j < i
+    D_ij = Lq[:, None, :] - L[None, :, :]                 # (c, c, hd)
+    tri = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[..., None]
+    W_ij = jnp.where(tri, jnp.exp(jnp.minimum(D_ij, 0.0)), 0.0)
+    A = jnp.einsum("id,ijd,jd->ij", r, W_ij, k)
+    A = A + jnp.diag(jnp.einsum("id,d,id->i", r, u, k))   # bonus diagonal
+    y = A @ v                                             # (c, hd_v)
+    # inter-chunk: y_i += (r_i * exp(Lq_i)) @ state
+    y = y + jnp.einsum("id,dv->iv", r * jnp.exp(Lq), state)
+    # state' = diag(exp(L_c)) state + sum_j (k_j * exp(L_c - L_j)) v_j^T
+    decay_all = jnp.exp(L[-1])                            # (hd,)
+    k_scaled = k * jnp.exp(L[-1][None, :] - L)
+    state = decay_all[:, None] * state + k_scaled.T @ v
+    return y, state
+
+
+_wkv_chunk_bh = jax.vmap(jax.vmap(_wkv_chunk,
+                                  in_axes=(0, 0, 0, 0, 0, 0)),    # over H
+                         in_axes=(0, 0, 0, 0, None, 0))           # over B
+
+
+def rwkv6_apply(cfg, p, x, ctx, cache, *, chunk: int = 32, **_):
+    mode = ctx["mode"]
+    B, S, D = x.shape
+    H, hd = cfg.rwkv_heads, cfg.head_dim
+    if mode == "decode":
+        x_prev = cache["shift"][:, None]
+    else:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], 1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    lw = -jnp.exp((p["w0"] + jnp.tanh(xw @ p["wd_a"]) @ p["wd_b"])
+                  .astype(F32)).reshape(B, S, H, hd)       # log-decay <= 0
+    u = p["u"].astype(F32)
+    state0 = cache["state"] if mode == "decode" else \
+        jnp.zeros((B, H, hd, hd), F32)
+
+    if mode == "decode":   # single-step recurrence
+        rt, kt, vt, lwt = (t[:, 0].transpose(0, 1, 2) for t in (r, k, v, lw))
+        # y = r·(state + (u⊙k) v^T);  state' = diag(w) state + k v^T
+        y = jnp.einsum("bhd,bhdv->bhv", rt, state0) + \
+            jnp.einsum("bhd,hd,bhd,bhv->bhv", rt, u, kt, vt)
+        state = jnp.exp(lwt)[..., None] * state0 + \
+            jnp.einsum("bhd,bhv->bhdv", kt, vt)
+        y = y[:, None]                                     # (B, 1, H, hd)
+        new_cache = {"state": state, "shift": x[:, -1]}
+    else:
+        pad = (-S) % chunk
+        Sp = S + pad
+        if pad:
+            # Padded positions must be state-neutral: k = 0 (no injection)
+            # and log-decay = 0 (state unchanged); their outputs are sliced.
+            zer = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            r, k, v, lw = zer(r), zer(k), zer(v), zer(lw)
+        nc = Sp // chunk
+
+        def to_chunks(t):   # (B, Sp, H, hd) -> (nc, B, H, c, hd)
+            return t.reshape(B, nc, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+
+        rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+
+        def step(st, inp):
+            rr, kk, vv, ll = inp
+            y, st = _wkv_chunk_bh(rr, kk, vv, ll, u, st)
+            # y leaves the chunk at compute width (group-norm renormalizes
+            # downstream) — halves stacked-output traffic (§Perf iter. R4)
+            return st, y.astype(x.dtype)
+
+        # Chunk-local rematerialization: without this, AD-of-scan stores the
+        # (c, c, hd) pairwise intra-chunk tensors for every chunk — measured
+        # at 85 TB/device of HBM traffic for rwkv6-3b:train_4k.  With it the
+        # scan saves only the carried state (the 1-D preserved-row buffer)
+        # and recomputes chunk internals in the backward.  See
+        # EXPERIMENTS.md §Perf iteration R1.
+        step = jax.checkpoint(step)
+        state, ys = jax.lax.scan(step, state0, (rc, kc, vc, lwc))
+        y = ys.transpose(1, 0, 3, 2, 4).reshape(B, Sp, H, hd)[:, :S]
+        new_cache = ({"state": state, "shift": x[:, S - 1]}
+                     if mode == "prefill" else None)
+
+    # per-head group norm, gate, output projection
+    y = y.reshape(B, -1, H, hd)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6)
+    y = (y.reshape(B, -1, H * hd) * p["ln_scale"]).astype(x.dtype)
+    return (y * g) @ p["wo"], new_cache
+
+
+def rwkv_cm_defs(cfg):
+    """RWKV channel mix (squared-ReLU FFN with token shift)."""
+    D, FF = cfg.d_model, cfg.d_ff
+    return {"mu_k": P((D,), (None,), init="zeros"),
+            "w_up": P((D, FF), ("embed", "mlp"), init="fan_in"),
+            "w_down": P((FF, D), ("mlp", "embed"), init="fan_in")}
+
+
+def rwkv_cm_apply(cfg, p, x, ctx, cache):
+    if ctx["mode"] == "decode":
+        x_prev = cache["shift"][:, None]
+    else:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], 1)
+    xk = x + (x_prev - x) * p["mu_k"]
+    h = jnp.square(jax.nn.relu(xk @ p["w_up"]))
+    y = h @ p["w_down"]
+    new_cache = {"shift": x[:, -1]} if ctx["mode"] != "train" else None
+    return y, new_cache

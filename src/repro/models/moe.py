@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN — grouped GShard-style dispatch.
+
+Tokens are blocked into groups of ``cfg.moe_group``; within each group a
+capacity-bounded one-hot dispatch/combine pair of einsums routes tokens to
+experts.  Experts are sharded over the 'model' mesh axis (EP); with the
+dispatch output sharded on the expert dim, GSPMD materializes the
+token->expert exchange as all-to-all/all-gather collectives.  Router math
+runs in f32.
+
+Routers: 'softmax' (qwen3: renormalized top-k of softmax probs) and
+'sigmoid' (deepseek-v3: top-k of sigmoid scores, renormalized).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32
+from .params import ParamDef
+
+P = ParamDef
+
+
+def moe_defs(cfg):
+    D, E, FF = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    d = {"router": P((D, E), ("embed", "expert"), init="fan_in", dtype=F32),
+         "w_gate": P((E, D, FF), ("expert", "embed", "expert_mlp"),
+                     init="fan_in"),
+         "w_up": P((E, D, FF), ("expert", "embed", "expert_mlp"),
+                   init="fan_in"),
+         "w_down": P((E, FF, D), ("expert", "expert_mlp", "embed"),
+                     init="fan_in")}
+    if cfg.n_shared_experts:
+        sff = FF * cfg.n_shared_experts
+        d["shared"] = {
+            "w_gate": P((D, sff), ("embed", "mlp"), init="fan_in"),
+            "w_up": P((D, sff), ("embed", "mlp"), init="fan_in"),
+            "w_down": P((sff, D), ("mlp", "embed"), init="fan_in")}
+    return d
+
+
+def _capacity(cfg, g: int) -> int:
+    c = int(g * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_apply(cfg, p, x):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(cfg.moe_group, T)
+    pad = (-T) % g
+    xt = x.reshape(T, D)
+    if pad:                        # ragged tail: pad, route, slice away
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    n = (T + pad) // g
+    C = _capacity(cfg, g)
+    xt = xt.reshape(n, g, D)
+
+    logits = jnp.einsum("ngd,de->nge", xt.astype(F32), p["router"])
+    if cfg.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        probs = scores / jnp.sum(scores, -1, keepdims=True)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        scores = probs
+    gate, idx = jax.lax.top_k(scores, K)                  # (n, g, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # capacity assignment: priority = (token order, choice order)
+    oh = jax.nn.one_hot(idx, E, dtype=F32)                # (n, g, K, E)
+    flat = oh.transpose(0, 2, 1, 3).reshape(n, K * g, E)  # choice-major
+    pos_flat = jnp.cumsum(flat, axis=1) - flat            # slots before me
+    pos = pos_flat.reshape(n, K, g, E).transpose(0, 2, 1, 3)
+    slot = jnp.sum(pos * oh, axis=-1)                     # (n, g, K)
+    keep = slot < C
+
+    dispatch = jnp.zeros((n, g, E, C), F32)
+    combine = jnp.zeros((n, g, E, C), F32)
+    for kk in range(K):                                   # K is small (<=8)
+        oh_e = oh[:, :, kk]                               # (n, g, E)
+        oh_c = jax.nn.one_hot(slot[:, :, kk], C, dtype=F32) \
+            * keep[:, :, kk, None]
+        d_k = jnp.einsum("nge,ngc->ngec", oh_e, oh_c)
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate[:, :, kk, None, None]
+
+    cdt = x.dtype
+    xin = jnp.einsum("ngec,ngd->necd", dispatch.astype(cdt), xt)
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", xin, p["w_gate"])) \
+        * jnp.einsum("necd,edf->necf", xin, p["w_up"])
+    yout = jnp.einsum("necf,efd->necd", h, p["w_down"])
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(cdt), yout)
+    y = y.reshape(n * g, D)[:T].reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) \
+            @ sp["w_down"]
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    frac_tokens = jnp.mean(jnp.max(oh, axis=2), axis=1)   # (n, E)
+    frac_probs = jnp.mean(probs, axis=1)                  # (n, E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return y, aux

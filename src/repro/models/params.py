@@ -1,0 +1,83 @@
+"""Parameter-definition machinery.
+
+Each model module declares its parameters once as a pytree of ``ParamDef``
+leaves; generic builders then materialize (a) real initialized arrays,
+(b) abstract ``ShapeDtypeStruct`` stand-ins for the dry-run (no device
+allocation), and (c) the logical-axis tree consumed by the sharding layer.
+One declaration, three views — the same discipline as the DP-HLS front-end
+(declare once, the back-end derives everything).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # logical axis name per dim
+    init: str = "normal"                 # normal | zeros | ones | fan_in
+    scale: float = 0.02
+    dtype: Any = None                    # None -> config param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _leaves(defs):
+    return jax.tree.leaves(defs, is_leaf=is_def)
+
+
+def _init_one(key, d: ParamDef, dtype):
+    dt = jnp.dtype(d.dtype or dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "fan_in":
+        fan = d.shape[0] if d.shape else 1
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                / math.sqrt(max(fan, 1))).astype(dt)
+    return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dt)
+
+
+def init_params(key, defs, dtype):
+    """Materialize real initialized arrays from a ParamDef tree."""
+    leaves = _leaves(defs)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    vals = [_init_one(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(jax.tree.structure(defs, is_leaf=is_def), vals)
+
+
+def abstract_params(defs, dtype):
+    """ShapeDtypeStruct tree — the dry-run view, zero allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or dtype)),
+        defs, is_leaf=is_def)
+
+
+def logical_tree(defs):
+    """Pytree of logical-axis tuples, parallel to the params tree."""
+    return jax.tree.map(lambda d: d.logical, defs, is_leaf=is_def)
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scan) dimension of size ``n`` to every leaf."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=(n,) + d.shape,
+                                      logical=(axis_name,) + d.logical),
+        defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    return sum(int(jnp.prod(jnp.asarray(d.shape))) if d.shape else 1
+               for d in _leaves(defs))

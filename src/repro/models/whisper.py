@@ -1,0 +1,242 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB —
+inputs arrive as precomputed frame embeddings, per the assignment).
+
+Encoder: bidirectional attention blocks.  Decoder: causal self-attention +
+cross-attention to encoder states.  Learned positional embeddings, GELU
+MLPs, pre-LayerNorm.  Decode mode caches decoder self k/v plus the
+per-layer cross k/v projected once from the encoder output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import mixers
+from .layers import F32, flash_attention, decode_attention, mlp_apply, \
+    mlp_defs, norm_apply, norm_defs, rope_apply
+from .params import ParamDef, abstract_params, init_params, logical_tree, \
+    stack_defs
+
+P = ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+def _enc_layer_defs(cfg):
+    return {"norm1": norm_defs(cfg, cfg.d_model),
+            "attn": mixers.attn_defs(cfg),
+            "norm2": norm_defs(cfg, cfg.d_model),
+            "ffn": mlp_defs(cfg)}
+
+
+def _dec_layer_defs(cfg):
+    return {"norm1": norm_defs(cfg, cfg.d_model),
+            "self": mixers.attn_defs(cfg),
+            "norm_x": norm_defs(cfg, cfg.d_model),
+            "cross": mixers.attn_defs(cfg),
+            "norm2": norm_defs(cfg, cfg.d_model),
+            "ffn": mlp_defs(cfg)}
+
+
+def param_defs(cfg):
+    D, V = cfg.d_model, cfg.vocab_eff
+    return {
+        "enc": {"pos": P((cfg.max_seq, D), (None, "embed")),
+                "stack": stack_defs(_enc_layer_defs(cfg), cfg.n_enc_layers),
+                "final_norm": norm_defs(cfg, D)},
+        "dec": {"embed": {"table": P((V, D), ("vocab", "embed"))},
+                "pos": P((cfg.max_seq, D), (None, "embed")),
+                "stack": stack_defs(_dec_layer_defs(cfg), cfg.n_layers),
+                "final_norm": norm_defs(cfg, D),
+                "head": {"w": P((D, V), ("embed", "vocab"), init="fan_in")}},
+    }
+
+
+def init(cfg, key):
+    return init_params(key, param_defs(cfg), cfg.param_dtype)
+
+
+def abstract(cfg):
+    return abstract_params(param_defs(cfg), cfg.param_dtype)
+
+
+def logical(cfg):
+    return logical_tree(param_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Attention helpers (whisper has no rope; positions are learned embeddings)
+# ---------------------------------------------------------------------------
+def _attn(cfg, p, x, x_kv, *, causal, ctx):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"])
+    o = flash_attention(q, k, v, causal=causal, window=None,
+                        chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+
+
+def _enc_layer(cfg, p, x, ctx):
+    h = norm_apply(cfg, p["norm1"], x)
+    y, _ = _attn(cfg, p["attn"], h, h, causal=False, ctx=ctx)
+    x = ctx["sc"](x + y, ("batch", None, "embed"))
+    x = x + mlp_apply(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x))
+    return ctx["sc"](x, ("batch", None, "embed"))
+
+
+def encode(cfg, params, frames, sc=None):
+    """frames: (B, Se, D) precomputed embeddings -> encoder states."""
+    sc = sc or (lambda x, _: x)
+    dt = jnp.dtype(cfg.compute_dtype)
+    Se = frames.shape[1]
+    x = frames.astype(dt) + params["enc"]["pos"][:Se].astype(dt)[None]
+    ctx = {"sc": sc}
+
+    def layer(pp, xc):
+        return _enc_layer(cfg, pp, xc, ctx)
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+
+    def body(xc, pp):
+        return layer(pp, xc), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"]["stack"])
+    return norm_apply(cfg, params["enc"]["final_norm"], x)
+
+
+def _dec_layer(cfg, p, x, enc_out, ctx, cache):
+    mode = ctx["mode"]
+    nc = {}
+    if mode == "decode":
+        h = norm_apply(cfg, p["norm1"], x)
+        y, sc_cache = mixers._attn_decode(cfg, p["self"], h, ctx,
+                                          cache["self"], None)
+        nc["self"] = sc_cache
+        x = x + y
+        h = norm_apply(cfg, p["norm_x"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"])
+        o = decode_attention(q, cache["cross_k"], cache["cross_v"],
+                             k_len=cache["cross_k"].shape[1])
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["cross"]["wo"])
+        nc["cross_k"] = cache["cross_k"]
+        nc["cross_v"] = cache["cross_v"]
+    else:
+        h = norm_apply(cfg, p["norm1"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["self"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, p["self"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["self"]["wv"])
+        o = flash_attention(q, k, v, causal=True, window=None,
+                            chunk=cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["self"]["wo"])
+        if mode == "prefill":
+            nc["self"] = {"k": k, "v": v}
+        h = norm_apply(cfg, p["norm_x"], x)
+        y, (ck, cv) = _attn(cfg, p["cross"], h, enc_out, causal=False,
+                            ctx=ctx)
+        x = x + y
+        if mode == "prefill":
+            nc["cross_k"] = ck
+            nc["cross_v"] = cv
+    x = ctx["sc"](x, ("batch", None, "embed"))
+    x = x + mlp_apply(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x))
+    return ctx["sc"](x, ("batch", None, "embed")), nc
+
+
+def forward(cfg, params, batch, sc=None):
+    """Train: batch = {'frames': (B, Se, D), 'tokens': (B, Sd)}."""
+    sc = sc or (lambda x, _: x)
+    enc_out = encode(cfg, params, batch["frames"], sc)
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.compute_dtype)
+    Sd = tokens.shape[1]
+    x = jnp.take(params["dec"]["embed"]["table"], tokens, axis=0).astype(dt) \
+        + params["dec"]["pos"][:Sd].astype(dt)[None]
+    ctx = {"mode": "train", "sc": sc}
+
+    def layer(pp, xc):
+        xo, _ = _dec_layer(cfg, pp, xc, enc_out, ctx, None)
+        return xo
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+
+    def body(xc, pp):
+        return layer(pp, xc), None
+
+    x, _ = jax.lax.scan(body, x, params["dec"]["stack"])
+    h = norm_apply(cfg, params["dec"]["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["dec"]["head"]["w"],
+                        preferred_element_type=F32)
+    return {"logits": sc(logits, ("batch", None, "vocab")), "aux_loss": 0.0,
+            "prefix": 0}
+
+
+def prefill(cfg, params, batch, sc=None):
+    sc = sc or (lambda x, _: x)
+    enc_out = encode(cfg, params, batch["frames"], sc)
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, Sd = tokens.shape
+    x = jnp.take(params["dec"]["embed"]["table"], tokens, axis=0).astype(dt) \
+        + params["dec"]["pos"][:Sd].astype(dt)[None]
+    ctx = {"mode": "prefill", "sc": sc}
+
+    def body(xc, pp):
+        return _dec_layer(cfg, pp, xc, enc_out, ctx, None)
+
+    x, cache = jax.lax.scan(body, x, params["dec"]["stack"])
+    h = norm_apply(cfg, params["dec"]["final_norm"], x[:, -1:])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["dec"]["head"]["w"],
+                        preferred_element_type=F32)[:, 0]
+    return logits, cache, jnp.full((B,), Sd, jnp.int32)
+
+
+def decode_step(cfg, params, cache, token, k_len, sc=None):
+    """Self cache capacity bounds the decode length; cross k/v fixed."""
+    sc = sc or (lambda x, _: x)
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["dec"]["embed"]["table"], token[:, None],
+                 axis=0).astype(dt)
+    x = x + jnp.take(params["dec"]["pos"], k_len[:, None], axis=0).astype(dt)
+    ctx = {"mode": "decode", "sc": sc, "k_len": k_len}
+
+    def body(xc, inp):
+        pp, cc = inp
+        return _dec_layer(cfg, pp, xc, None, ctx, cc)
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec"]["stack"], cache))
+    h = norm_apply(cfg, params["dec"]["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["dec"]["head"]["w"],
+                        preferred_element_type=F32)[:, 0]
+    return logits, new_cache
+
+
+def cache_spec(cfg, B, S_dec, S_enc):
+    dt = jnp.dtype(cfg.compute_dtype)
+    K, hd, L = cfg.n_kv_eff, cfg.head_dim, cfg.n_layers
+    sd = lambda s: ((L,) + s, dt)
+    return {"self": {"k": sd((B, S_dec, K, hd)), "v": sd((B, S_dec, K, hd))},
+            "cross_k": sd((B, S_enc, K, hd)),
+            "cross_v": sd((B, S_enc, K, hd))}
+
+
+def _mat(spec, make):
+    is_sd = lambda x: (isinstance(x, tuple) and len(x) == 2
+                       and isinstance(x[0], tuple))
+    return jax.tree.map(lambda s: make(*s), spec, is_leaf=is_sd)
+
+
+def init_cache(cfg, B, S_dec, S_enc):
+    return _mat(cache_spec(cfg, B, S_dec, S_enc),
+                lambda s, d: jnp.zeros(s, d))
+
+
+def abstract_cache(cfg, B, S_dec, S_enc):
+    return _mat(cache_spec(cfg, B, S_dec, S_enc), jax.ShapeDtypeStruct)
+
+
+def cache_logical(cfg):
+    ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    return {"self": {"k": ax, "v": ax}, "cross_k": ax, "cross_v": ax}

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, init_state, abstract_state, state_logical, \
+    update
+from .schedules import cosine_with_warmup, constant

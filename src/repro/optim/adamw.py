@@ -1,0 +1,161 @@
+"""AdamW in pure JAX, with optional int8 block-quantized moments.
+
+The quantized variant (8-bit-Adam style) keeps both moments as int8 with
+per-row f32 absmax scales — 4x less optimizer HBM than f32 moments, the
+difference between deepseek-v3-671b fitting a 256-chip pod or not (see
+EXPERIMENTS.md §Dry-run).  Moments are dequantized, updated, and
+requantized inside the step; the requantization error behaves like a small
+amount of gradient noise and is the documented trade-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantized: bool = False          # int8 moments
+    clip_norm: Optional[float] = 1.0
+
+
+# -- int8 block quantization -------------------------------------------------
+# First moment: signed linear int8 with per-row absmax scale (noise-like
+# values, linear steps are fine).  Second moment: *log-space* int8 — v spans
+# many decades within a row and a linear grid collapses small entries to 0,
+# which explodes 1/sqrt(v); an int8 grid over per-row log2 range keeps ~8%
+# relative error across the whole range (bitsandbytes-style dynamic qmap,
+# simplified).
+_V_FLOOR = 1e-30
+
+
+def _quantize(x):
+    """x: f32 -> (int8, f32 per-row scale).  Rows = leading dims."""
+    a = jnp.max(jnp.abs(x), axis=-1, keepdims=True) if x.ndim else jnp.abs(x)
+    a = jnp.maximum(a, 1e-20)
+    q = jnp.clip(jnp.round(x / a * 127.0), -127, 127).astype(jnp.int8)
+    return q, a.astype(F32)
+
+
+def _dequantize(q, a):
+    return q.astype(F32) / 127.0 * a
+
+
+def _quantize_log(v):
+    """v >= 0 -> (int8 codes, f32 (lo, span) per row packed on last dim)."""
+    lv = jnp.log2(jnp.maximum(v, _V_FLOOR))
+    lo = jnp.min(lv, axis=-1, keepdims=True) if v.ndim else lv
+    hi = jnp.max(lv, axis=-1, keepdims=True) if v.ndim else lv
+    span = jnp.maximum(hi - lo, 1e-6)
+    q = jnp.clip(jnp.round((lv - lo) / span * 254.0) - 127,
+                 -127, 127).astype(jnp.int8)
+    scale = jnp.concatenate([lo, span], axis=-1) if v.ndim else \
+        jnp.stack([lo, span])
+    return q, scale.astype(F32)
+
+
+def _dequantize_log(q, scale):
+    if q.ndim:
+        lo, span = scale[..., :1], scale[..., 1:]
+    else:
+        lo, span = scale[0], scale[1]
+    lv = (q.astype(F32) + 127.0) / 254.0 * span + lo
+    v = jnp.exp2(lv)
+    return jnp.where(v <= _V_FLOOR * 2, 0.0, v)
+
+
+def init_state(cfg: AdamWConfig, params):
+    def one(p):
+        # distinct buffers per moment — donation forbids aliased arguments
+        if cfg.quantized:
+            qm, sm = _quantize(jnp.zeros(p.shape, F32))
+            qv, sv = _quantize_log(jnp.zeros(p.shape, F32))
+            return {"m_q": qm, "m_s": sm, "v_q": qv, "v_s": sv}
+        return {"m": jnp.zeros(p.shape, F32), "v": jnp.zeros(p.shape, F32)}
+    return {"mu": jax.tree.map(one, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(cfg: AdamWConfig, abstract_p):
+    def one(p):
+        if cfg.quantized:
+            srow = p.shape[:-1] + (1,) if len(p.shape) else ()
+            srow2 = p.shape[:-1] + (2,) if len(p.shape) else (2,)
+            return {"m_q": jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                    "m_s": jax.ShapeDtypeStruct(srow, F32),
+                    "v_q": jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                    "v_s": jax.ShapeDtypeStruct(srow2, F32)}
+        return {"m": jax.ShapeDtypeStruct(p.shape, F32),
+                "v": jax.ShapeDtypeStruct(p.shape, F32)}
+    return {"mu": jax.tree.map(one, abstract_p),
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _is_axes(x) -> bool:
+    """A logical-axis tuple leaf: (str|None, ...) — NOT a tuple of subtrees."""
+    return isinstance(x, tuple) and all(e is None or isinstance(e, str)
+                                        for e in x)
+
+
+def state_logical(cfg: AdamWConfig, logical_p):
+    """Optimizer-state logical axes mirror the parameter's."""
+    def one(ax):
+        if cfg.quantized:
+            srow = tuple(ax[:-1]) + (None,) if len(ax) else ()
+            return {"m_q": ax, "m_s": srow, "v_q": ax, "v_s": srow}
+        return {"m": ax, "v": ax}
+    return {"mu": jax.tree.map(one, logical_p, is_leaf=_is_axes),
+            "count": ()}
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def update(cfg: AdamWConfig, lr, params, grads, state):
+    """One AdamW step.  lr: scalar (schedules resolve outside)."""
+    count = state["count"] + 1
+    if cfg.clip_norm is not None:
+        gn = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    else:
+        gn = _global_norm(grads)
+    c1 = 1.0 - cfg.b1 ** count.astype(F32)
+    c2 = 1.0 - cfg.b2 ** count.astype(F32)
+
+    def one(p, g, mu):
+        g = g.astype(F32)
+        if cfg.quantized:
+            m = _dequantize(mu["m_q"], mu["m_s"])
+            v = _dequantize_log(mu["v_q"], mu["v_s"])
+        else:
+            m, v = mu["m"], mu["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(F32)
+        new_p = (p.astype(F32) - lr * upd).astype(p.dtype)
+        if cfg.quantized:
+            qm, sm = _quantize(m)
+            qv, sv = _quantize_log(v)
+            return new_p, {"m_q": qm, "m_s": sm, "v_q": qv, "v_s": sv}
+        return new_p, {"m": m, "v": v}
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    out = [one(p, g, mu) for p, g, mu in zip(flat_p, flat_g, flat_mu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, {"mu": new_mu, "count": count}, gn

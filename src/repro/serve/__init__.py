@@ -1,0 +1,2 @@
+from .engine import Request, ServeSession
+from .alignment_service import AlignRequest, AlignmentService

@@ -1,0 +1,132 @@
+"""The paper's accelerator as a service: batched DP alignment over a mesh.
+
+This is the N_K x N_B arbiter of DP-HLS §5.3 at pod scale: requests queue
+up per kernel type (heterogeneous kernels = multiple channels, exactly the
+paper's "mix of global and local aligners"), are padded into fixed-shape
+batches (N_B blocks), and dispatched to a jitted aligner whose batch axis
+is sharded over the mesh 'data' axis (N_K channels).  A heartbeat-driven
+deadline re-dispatches batches whose worker goes quiet (ft.heartbeat) —
+the straggler story the FPGA host code never needed but a 1000-node
+deployment does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch as core_batch, kernels_zoo, types as T
+from repro.core.traceback import moves_to_cigar
+from repro.ft import HeartbeatMonitor
+
+
+@dataclasses.dataclass
+class AlignRequest:
+    rid: int
+    kernel: str                  # kernels_zoo name
+    query: np.ndarray
+    ref: np.ndarray
+    result: Optional[dict] = None
+
+
+class AlignmentService:
+    """Single-process reference implementation of the dispatch logic.
+
+    ``mesh=None`` runs un-sharded (CPU smoke); with a mesh, each kernel
+    channel jits a sharded aligner over the 'data' axis.
+    """
+
+    def __init__(self, max_len: int = 256, block: int = 8, mesh=None,
+                 engine_name: str = "wavefront", with_traceback: bool = True,
+                 redispatch_after: float = 60.0):
+        self.max_len, self.block = max_len, block
+        self.mesh = mesh
+        self.engine_name = engine_name
+        self.with_traceback = with_traceback
+        self.queues: Dict[str, List[AlignRequest]] = {}
+        self.channels: Dict[str, tuple] = {}
+        self.monitor = HeartbeatMonitor(dead_after=redispatch_after)
+        self.inflight: Dict[str, tuple] = {}   # worker -> (kernel, batch)
+
+    def _channel(self, kernel: str):
+        if kernel not in self.channels:
+            spec, params = kernels_zoo.make(kernel)
+            if self.mesh is not None:
+                fn = core_batch.make_sharded_aligner(
+                    spec, self.mesh, engine_name=self.engine_name,
+                    with_traceback=self.with_traceback and
+                    spec.traceback is not None)
+            else:
+                import jax
+
+                def fn(params, q, r, ql, rl, _spec=spec):
+                    return core_batch.align_batch(
+                        _spec, params, q, r, ql, rl,
+                        engine_name=self.engine_name,
+                        with_traceback=self.with_traceback and
+                        _spec.traceback is not None)
+                fn = jax.jit(fn)
+            self.channels[kernel] = (spec, params, fn)
+        return self.channels[kernel]
+
+    def submit(self, req: AlignRequest):
+        self.queues.setdefault(req.kernel, []).append(req)
+
+    def _pad_batch(self, reqs: List[AlignRequest], char_shape, dtype):
+        n = self.block
+        L = self.max_len
+        qs = np.zeros((n, L) + char_shape, dtype)
+        rs = np.zeros((n, L) + char_shape, dtype)
+        ql = np.zeros((n,), np.int32)
+        rl = np.zeros((n,), np.int32)
+        for i, r in enumerate(reqs):
+            ql[i] = len(r.query)
+            rl[i] = len(r.ref)
+            qs[i, : ql[i]] = r.query
+            rs[i, : rl[i]] = r.ref
+        # pad rows beyond the request count with length-1 dummies
+        ql[len(reqs):] = 1
+        rl[len(reqs):] = 1
+        return qs, rs, ql, rl
+
+    def drain(self, worker: str = "w0") -> int:
+        """Process all queued requests; returns #completed."""
+        done = 0
+        for kernel, queue in list(self.queues.items()):
+            spec, params, fn = self._channel(kernel)
+            while queue:
+                reqs = [queue.pop(0) for _ in range(min(self.block,
+                                                        len(queue)))]
+                self.monitor.beat(worker)
+                self.inflight[worker] = (kernel, reqs)
+                qs, rs, ql, rl = self._pad_batch(
+                    reqs, spec.char_shape,
+                    np.dtype(jnp.dtype(spec.char_dtype).name))
+                out = fn(params, jnp.asarray(qs), jnp.asarray(rs),
+                         jnp.asarray(ql), jnp.asarray(rl))
+                for i, r in enumerate(reqs):
+                    res = {"score": float(np.asarray(out.score)[i]),
+                           "end": (int(np.asarray(out.end_i)[i]),
+                                   int(np.asarray(out.end_j)[i]))}
+                    if out.moves is not None:
+                        res["cigar"] = moves_to_cigar(
+                            np.asarray(out.moves)[i],
+                            int(np.asarray(out.n_moves)[i]))
+                    r.result = res
+                    done += 1
+                del self.inflight[worker]
+                self.monitor.beat(worker)
+        return done
+
+    def redispatch_dead(self, now: Optional[float] = None) -> int:
+        """Requeue in-flight batches whose worker stopped beating."""
+        n = 0
+        for worker, (kernel, reqs) in list(self.inflight.items()):
+            if self.monitor.status(worker, now) == "dead":
+                self.queues.setdefault(kernel, []).extend(reqs)
+                del self.inflight[worker]
+                n += len(reqs)
+        return n

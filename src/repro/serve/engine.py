@@ -1,0 +1,115 @@
+"""LM serving session: continuous batching over a fixed slot grid.
+
+A ``ServeSession`` owns a (B, S_max) KV cache; requests occupy slots.
+``step()`` decodes one token for every active slot (greedy or sampled);
+finished slots are freed and refilled by ``add()`` with a per-slot
+prefill.  This is the slot-manager pattern of production LM servers,
+scaled down to run on CPU with the reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model, lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # int32 tokens
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _splice(big, one, slot):
+    """Write a 1-row cache into row ``slot`` of the batched cache
+    (leaves are layer-stacked: (L, B, ...), batch on axis 1)."""
+    return jax.lax.dynamic_update_slice_in_dim(big, one.astype(big.dtype),
+                                               slot, axis=1)
+
+
+class ServeSession:
+    def __init__(self, cfg, params, batch_slots: int, max_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        assert not cfg.enc_dec, "use whisper-specific driver for enc-dec"
+        self.cfg, self.params = cfg, params
+        self.B, self.S = batch_slots, max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = lm.init_cache(cfg, batch_slots, max_len)
+        self.k_len = np.zeros((batch_slots,), np.int32)
+        self.last_tok = np.zeros((batch_slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        model = get_model(cfg)
+        self._decode = jax.jit(
+            lambda p, c, t, k: model.decode_step(cfg, p, c, t, k))
+        self._prefill_jit = {}    # per prompt-length compile cache
+
+    # -- slot management ----------------------------------------------------
+    def add(self, req: Request) -> bool:
+        try:
+            slot = self.active.index(None)
+        except ValueError:
+            return False
+        Lp = len(req.prompt)
+        fn = self._prefill_jit.get(Lp)
+        if fn is None:
+            model = get_model(self.cfg)
+
+            def prefill(p, toks):
+                logits, cache, _ = model.prefill(self.cfg, p,
+                                                 {"tokens": toks})
+                return logits, cache
+            fn = self._prefill_jit[Lp] = jax.jit(prefill)
+        logits, cache1 = fn(self.params,
+                            jnp.asarray(req.prompt, jnp.int32)[None])
+        cache1 = lm.grow_cache(self.cfg, cache1, 1, self.S)
+        self.cache = jax.tree.map(lambda big, one: _splice(big, one, slot),
+                                  self.cache, cache1)
+        self.k_len[slot] = Lp
+        nxt = int(jnp.argmax(logits[0]))
+        self.last_tok[slot] = nxt
+        req.out.append(nxt)
+        self.active[slot] = req
+        return True
+
+    def step(self):
+        """Decode one token for all active slots."""
+        if not any(r is not None for r in self.active):
+            return
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_tok),
+            jnp.asarray(self.k_len))
+        logits = np.asarray(logits, np.float32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.k_len[slot] += 1
+            if self.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                tok = int(jax.random.categorical(
+                    sub, jnp.asarray(logits[slot]) / self.temperature))
+            else:
+                tok = int(np.argmax(logits[slot]))
+            req.out.append(tok)
+            self.last_tok[slot] = tok
+            if len(req.out) >= req.max_new or self.k_len[slot] >= self.S - 1:
+                req.done = True
+                self.active[slot] = None
+
+    def run(self, requests: List[Request], max_steps: int = 10_000):
+        queue = list(requests)
+        steps = 0
+        while (queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
+            while queue and self.add(queue[0]):
+                queue.pop(0)
+            self.step()
+            steps += 1
+        return [r for r in requests if r.done]

@@ -1,0 +1,3 @@
+from .logical import (AxisRules, TRAIN_RULES, INFER_RULES, TRAIN_RULES_V2,
+                      INFER_RULES_V2, SP_TRAIN_RULES, resolve_spec,
+                      logical_sharding, constrain)

@@ -1,0 +1,158 @@
+"""Logical-axis sharding (MaxText-style).
+
+Every parameter / activation dimension carries a *logical* axis name; rule
+tables map logical names to (prioritized) mesh axes.  Resolution checks
+divisibility and falls back down the priority list, so one model definition
+serves every mesh (1-device smoke tests, 256-chip pod, 512-chip multi-pod)
+and every mode (FSDP training vs TP inference) without edits.
+
+Logical axes used across the framework:
+  batch        global batch            -> DP over ('pod','data')
+  seq          sequence                -> None (SP variants map it to 'model')
+  embed        d_model / residual      -> FSDP over ('data',) for params
+  heads        attention q heads       -> TP
+  kv_heads     attention kv heads      -> TP when divisible
+  head_dim     per-head dim            -> None
+  mlp          FFN hidden              -> TP
+  vocab        vocabulary              -> TP
+  expert       MoE experts             -> EP over 'model'
+  expert_mlp   per-expert FFN hidden   -> None (EP already covers 'model')
+  cache_seq    KV-cache sequence       -> 'model' fallback for small-kv decode
+  layers       scanned layer stack     -> None
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """logical axis -> tuple of candidate mesh-axis assignments.
+
+    Each candidate is a tuple of mesh axes (sharded jointly) or () meaning
+    'replicate'.  The first candidate whose mesh axes all exist and divide
+    the dimension is used.
+    """
+    rules: dict
+
+    def candidates(self, logical: Optional[str]):
+        if logical is None:
+            return ((),)
+        return self.rules.get(logical, ((),)) + ((),)
+
+
+TRAIN_RULES = AxisRules({
+    "batch":      ((("pod", "data")), ("data",),),
+    "seq":        ((),),
+    "embed":      (("data",),),         # FSDP / ZeRO-3 within a pod
+    "heads":      (("model",),),
+    "heads_flat": (("model",),),
+    "kv_heads":   (("model",),),
+    "head_dim":   ((),),
+    "mlp":        (("model",),),
+    "vocab":      (("model",),),
+    "expert":     (("model",),),
+    "expert_mlp": ((),),
+    "q_lora":     ((),),
+    "cache_seq":  ((),),
+    "layers":     ((),),
+    "lru":        (("model",),),
+    "conv":       ((),),
+})
+
+# Inference: params sharded TP + FSDP-style over data for memory; batch DP.
+INFER_RULES = AxisRules({
+    "batch":      ((("pod", "data")), ("data",),),
+    "seq":        ((),),
+    "embed":      (("data",),),
+    "heads":      (("model",),),
+    "heads_flat": (("model",),),
+    "kv_heads":   (("model",),),
+    "head_dim":   ((),),
+    "mlp":        (("model",),),
+    "vocab":      (("model",),),
+    "expert":     (("model",),),
+    "expert_mlp": ((),),
+    "q_lora":     ((),),
+    "cache_seq":  (("model",),),        # flash-decode style seq sharding
+    "layers":     ((),),
+    "lru":        (("model",),),
+    "conv":       ((),),
+})
+
+# Sequence-parallel variant (hillclimb): activations' seq axis on 'model'.
+SP_TRAIN_RULES = AxisRules(dict(TRAIN_RULES.rules, **{"seq": (("model",),)}))
+
+# --- v2 (beyond-paper optimized) rule sets — see EXPERIMENTS.md §Perf ---
+# NOTE: 2-D (model x data) expert sharding was hypothesized here and
+# REFUTED (§Perf iteration D0): GSPMD cannot route the einsum dispatch to
+# 2-D-sharded experts without replicating tokens (collective term 159 s ->
+# 1247 s).  Experts stay 1-D over 'model'; the manual shard_map sort-based
+# all-to-all needed for the 2-D layout is future work.
+TRAIN_RULES_V2 = AxisRules(dict(TRAIN_RULES.rules))
+
+# Inference v2: params TP-only (replicated over 'data') — kills the
+# per-layer all-gathers that dominated every inference cell's collective
+# term.  Archs whose TP-sharded params exceed HBM opt out via
+# cfg.infer_fsdp (command-r-plus: 13 GiB/device TP-16).
+INFER_RULES_V2 = AxisRules(dict(INFER_RULES.rules, **{
+    "embed": ((),),
+}))
+
+
+def _normalize(cand):
+    if isinstance(cand, str):
+        return (cand,)
+    return tuple(cand)
+
+
+def resolve_spec(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+                 rules: AxisRules, mesh: Mesh) -> P:
+    """Pick a PartitionSpec for `shape` given logical axis names."""
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used = set()
+    out = []
+    for dim, logical in zip(shape, logical_axes):
+        chosen = None
+        for cand in rules.candidates(logical):
+            cand = _normalize(cand)
+            if not cand:
+                chosen = None
+                break
+            if any(a not in mesh.shape or a in used for a in cand):
+                continue
+            total = 1
+            for a in cand:
+                total *= mesh.shape[a]
+            if dim % total == 0:
+                chosen = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        out.append(chosen)
+    return P(*out)
+
+
+def logical_sharding(shape, logical_axes, rules, mesh) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, logical_axes, rules, mesh))
+
+
+def constrain(x, logical_axes, rules, mesh=None):
+    """with_sharding_constraint by logical names (no-op off-mesh)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty or len(mesh.devices.flatten()) == 1:
+        return x
+    spec = resolve_spec(x.shape, logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return m
+    except Exception:
+        return None

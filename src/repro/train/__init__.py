@@ -1,0 +1,4 @@
+from .loss import lm_loss
+from .step import (abstract_state, make_state, make_train_step,
+                   state_logical)
+from . import compress

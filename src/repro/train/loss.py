@@ -1,0 +1,45 @@
+"""Next-token cross-entropy (+ z-loss, MoE aux, MTP) for all arch families."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _ce(logits, labels, vocab_valid):
+    """logits: (..., V_eff) f32; labels: (...) int32.  Padded vocab masked."""
+    V = logits.shape[-1]
+    if vocab_valid < V:
+        mask = (jax.lax.iota(jnp.int32, V) < vocab_valid)
+        logits = jnp.where(mask, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold, lse
+
+
+def lm_loss(cfg, out, batch, z_coef: float = 1e-4, aux_coef: float = 1e-2):
+    """-> (scalar loss, metrics dict)."""
+    logits = out["logits"].astype(F32)
+    prefix = out.get("prefix", 0)
+    tokens = batch["tokens"]
+    St = tokens.shape[1]
+    preds = logits[:, prefix:prefix + St - 1]
+    labels = tokens[:, 1:]
+    ce, lse = _ce(preds, labels, cfg.vocab_size)
+    loss = jnp.mean(ce)
+    zl = z_coef * jnp.mean(jnp.square(lse))
+    total = loss + zl
+    metrics = {"ce": loss, "z_loss": zl}
+    aux = out.get("aux_loss", 0.0)
+    if cfg.n_experts:
+        total = total + aux_coef * aux
+        metrics["moe_aux"] = aux
+    if "mtp_logits" in out:
+        mtp_ce, _ = _ce(out["mtp_logits"][:, :-1].astype(F32),
+                        tokens[:, 2:], cfg.vocab_size)
+        mtp = jnp.mean(mtp_ce)
+        total = total + cfg.mtp_weight * mtp
+        metrics["mtp_ce"] = mtp
+    metrics["loss"] = total
+    return total, metrics

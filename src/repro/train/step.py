@@ -1,0 +1,103 @@
+"""Train-step factory: loss -> grads (with microbatch accumulation) ->
+optional EF-int8 compression -> AdamW.  Pure function of (state, batch);
+the launch layer jits it with logical-axis in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.optim import adamw
+from . import compress as C
+from .loss import lm_loss
+
+F32 = jnp.float32
+
+
+def make_state(cfg, opt_cfg: adamw.AdamWConfig, key, use_ef: bool = False):
+    model = get_model(cfg)
+    params = model.init(cfg, key)
+    state = {"params": params,
+             "opt": adamw.init_state(opt_cfg, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if use_ef:
+        state["ef"] = C.init_ef(params)
+    return state
+
+
+def abstract_state(cfg, opt_cfg: adamw.AdamWConfig, use_ef: bool = False):
+    model = get_model(cfg)
+    ap = model.abstract(cfg)
+    state = {"params": ap,
+             "opt": adamw.abstract_state(opt_cfg, ap),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if use_ef:
+        state["ef"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16), ap)
+    return state
+
+
+def state_logical(cfg, opt_cfg: adamw.AdamWConfig, use_ef: bool = False):
+    model = get_model(cfg)
+    lg = model.logical(cfg)
+    state = {"params": lg,
+             "opt": adamw.state_logical(opt_cfg, lg),
+             "step": ()}
+    if use_ef:
+        state["ef"] = lg
+    return state
+
+
+def _microbatch(batch, accum):
+    """Split the leading batch dim into (accum, B/accum)."""
+    def f(x):
+        B = x.shape[0]
+        assert B % accum == 0, (B, accum)
+        return x.reshape((accum, B // accum) + x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, lr_fn: Callable,
+                    sc=None, use_ef: bool = False):
+    model = get_model(cfg)
+    accum = cfg.accum_steps
+
+    def loss_fn(params, mb):
+        out = model.forward(cfg, params, mb, sc=sc)
+        return lm_loss(cfg, out, mb)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = _microbatch(batch, accum)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b / accum, gacc, g)
+                return (gacc, lacc + l / accum), m
+
+            (grads, loss), ms = jax.lax.scan(
+                body, (g0, jnp.zeros((), F32)), mbs)
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+        new_state = dict(state)
+        if use_ef:   # cross-pod int8 wire format with error feedback
+            grads, new_state["ef"] = C.ef_compress(grads, state["ef"])
+        lr = lr_fn(state["step"])
+        new_params, new_opt, gn = adamw.update(opt_cfg, lr, params, grads,
+                                               state["opt"])
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        metrics = dict(metrics, loss=loss, grad_norm=gn, lr=lr)
+        return new_state, metrics
+
+    return step_fn

@@ -1,0 +1,49 @@
+"""Band-packed O(n·W) engine vs the reference oracle (kernels #11-#13)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import align, kernels_zoo
+
+from conftest import make_kernel_inputs
+
+
+@pytest.mark.parametrize("kid", [11, 12, 13])
+@pytest.mark.parametrize("nq,nr", [(48, 48), (64, 56), (33, 40)])
+def test_banded_engine_matches_reference(kid, nq, nr, rng):
+    spec, params = kernels_zoo.make(kid)
+    if abs(nq - nr) > spec.band:
+        pytest.skip("corner outside band")
+    q, r = make_kernel_inputs(rng, spec, nq, nr)
+    s_ref = align(spec, params, q, r, engine_name="reference",
+                  with_traceback=False).score
+    s_bnd = align(spec, params, q, r, engine_name="banded",
+                  with_traceback=False).score
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_bnd),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("band", [4, 8, 32])
+def test_banded_engine_band_widths(band, rng):
+    from repro.core.kernels_zoo import dna_linear
+    spec = dna_linear.banded_global_linear(band=band)
+    params = dna_linear.default_params()
+    q, r = make_kernel_inputs(rng, spec, 40, 40)
+    s_ref = align(spec, params, q, r, engine_name="reference",
+                  with_traceback=False).score
+    s_bnd = align(spec, params, q, r, engine_name="banded",
+                  with_traceback=False).score
+    assert int(s_ref) == int(s_bnd)
+
+
+def test_banded_engine_effective_lengths(rng):
+    from repro.core.kernels_zoo import dna_linear
+    spec = dna_linear.banded_global_linear(band=16)
+    params = dna_linear.default_params()
+    q, r = make_kernel_inputs(rng, spec, 64, 64)
+    a = align(spec, params, q[:40], r[:44], engine_name="reference",
+              with_traceback=False)
+    b = align(spec, params, q, r, q_len=40, r_len=44,
+              engine_name="banded", with_traceback=False)
+    assert int(a.score) == int(b.score)

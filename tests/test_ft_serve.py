@@ -1,0 +1,111 @@
+"""Fault-tolerance bookkeeping + serving behaviour."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.ft import ALIVE, DEAD, STRAGGLER, HeartbeatMonitor, plan_mesh
+from repro.serve import AlignRequest, AlignmentService, Request, ServeSession
+
+
+def test_heartbeat_states():
+    m = HeartbeatMonitor(dead_after=10.0, straggler_factor=3.0)
+    for t in range(5):
+        m.beat("w0", now=float(t))
+        m.beat("w1", now=float(t))
+    m.beat("w0", now=5.0)
+    assert m.status("w0", now=5.5) == ALIVE
+    assert m.status("w1", now=8.9) == STRAGGLER      # 4.9s vs 1s median
+    assert m.status("w1", now=15.1) == DEAD
+    assert m.status("unknown", now=0.0) == DEAD
+    # at 7.5: w0 gap 2.5 (alive), w1 gap 3.5 (> 3x median -> straggler)
+    assert m.alive_workers(now=7.5) == ["w0"]
+
+
+def test_plan_mesh_elastic():
+    assert plan_mesh(512, 16, pod_size=256) == (2, 16, 16)
+    assert plan_mesh(256, 16) == (16, 16)
+    # lose a node: largest usable shrinks, TP preserved
+    assert plan_mesh(255, 16) == (15, 16)
+    # TP preserved as long as one replica fits (memory constraint)
+    assert plan_mesh(24, 16) == (1, 16)
+    # below one replica: TP degrades by powers of two
+    assert plan_mesh(12, 16) == (1, 8)
+    assert plan_mesh(1, 16) == (1, 1)
+
+
+def test_alignment_service_end_to_end(rng):
+    from repro.core import align, kernels_zoo
+    svc = AlignmentService(max_len=64, block=4)
+    qs = [rng.integers(0, 4, rng.integers(10, 40)).astype(np.uint8)
+          for _ in range(10)]
+    rs = [rng.integers(0, 4, rng.integers(10, 40)).astype(np.uint8)
+          for _ in range(10)]
+    for i in range(10):
+        svc.submit(AlignRequest(rid=i, kernel="global_affine",
+                                query=qs[i], ref=rs[i]))
+    # heterogeneous second channel (paper: mixed kernels via N_K)
+    svc.submit(AlignRequest(rid=10, kernel="local_linear",
+                            query=qs[0], ref=rs[0]))
+    reqs = [r for q in svc.queues.values() for r in q]
+    assert svc.drain() == 11
+    import jax.numpy as jnp
+    spec, params = kernels_zoo.make("global_affine")
+    for r in reqs[:3]:
+        if r.kernel != "global_affine":
+            continue
+        direct = align(spec, params, jnp.asarray(r.query),
+                       jnp.asarray(r.ref), with_traceback=False)
+        assert r.result["score"] == pytest.approx(float(direct.score))
+
+
+def test_alignment_service_redispatch():
+    svc = AlignmentService(max_len=32, block=2, redispatch_after=5.0)
+    svc.monitor.beat("w1", now=0.0)
+    svc.inflight["w1"] = ("global_affine",
+                          [AlignRequest(0, "global_affine",
+                                        np.zeros(4, np.uint8),
+                                        np.zeros(4, np.uint8))])
+    assert svc.redispatch_dead(now=1.0) == 0        # still alive
+    assert svc.redispatch_dead(now=20.0) == 1       # dead -> requeued
+    assert len(svc.queues["global_affine"]) == 1
+
+
+def test_serve_session_matches_direct_rollout(rng):
+    """Slot-based decode == direct greedy rollout via forward()."""
+    import jax.numpy as jnp
+    from repro.models import get_model
+    cfg = configs.get("olmo-1b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    max_new = 6
+    # direct rollout
+    toks = list(prompt)
+    for _ in range(max_new):
+        out = model.forward(cfg, params,
+                            {"tokens": jnp.asarray(toks)[None]})
+        toks.append(int(jnp.argmax(out["logits"][0, -1])))
+    want = toks[len(prompt):]
+    sess = ServeSession(cfg, params, batch_slots=2, max_len=64)
+    req = Request(rid=0, prompt=prompt, max_new=max_new)
+    done = sess.run([req])
+    assert done and done[0].out == want
+
+
+def test_serve_session_multi_slot(rng):
+    from repro.models import get_model
+    cfg = configs.get("olmo-1b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        4 + i).astype(np.int32),
+                    max_new=4)
+            for i in range(5)]           # 5 requests > 2 slots: queuing
+    sess = ServeSession(cfg, params, batch_slots=2, max_len=48)
+    done = sess.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.out) == 4 for r in done)

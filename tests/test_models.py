@@ -1,0 +1,123 @@
+"""Per-arch smoke tests (reduced configs, CPU): forward/train shapes +
+no NaNs, and the prefill/decode == forward consistency matrix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import get_model, lm
+
+B, S = 2, 64
+
+
+def _batches(cfg, rng, full=True):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    if cfg.enc_dec:
+        frames = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+        return ({"frames": frames, "tokens": toks},
+                {"frames": frames, "tokens": toks[:, : S - 1]},
+                toks[:, S - 1])
+    if cfg.frontend == "vlm":
+        pe = jnp.asarray(
+            rng.normal(size=(B, S // 2, cfg.d_model)).astype(np.float32))
+        return ({"prefix_embeds": pe, "tokens": toks[:, : S // 2]},
+                {"prefix_embeds": pe, "tokens": toks[:, : S // 2 - 1]},
+                toks[:, S // 2 - 1])
+    return ({"tokens": toks}, {"tokens": toks[:, : S - 1]}, toks[:, S - 1])
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_forward_smoke(arch, rng):
+    cfg = configs.get(arch, reduced=True)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    bf, _, _ = _batches(cfg, rng)
+    out = model.forward(cfg, params, bf)
+    n_tok = bf["tokens"].shape[1] + (
+        bf.get("prefix_embeds").shape[1] if "prefix_embeds" in bf else 0)
+    assert out["logits"].shape == (B, n_tok, cfg.vocab_eff)
+    assert bool(jnp.all(jnp.isfinite(out["logits"])))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_prefill_decode_consistency(arch, rng):
+    cfg = configs.get(arch, reduced=True)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    bf, bp, last = _batches(cfg, rng)
+    out = model.forward(cfg, params, bf)
+    logits_p, cache, klen = model.prefill(cfg, params, bp)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(out["logits"][:, -2]),
+                               atol=2e-4, rtol=1e-4)
+    if cfg.enc_dec:
+        cache = dict(cache)
+        cache["self"] = jax.tree.map(
+            lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, 4), (0, 0), (0, 0))),
+            cache["self"])
+    else:
+        cache = lm.grow_cache(cfg, cache, B, int(klen[0]) + 4)
+    logits_d, _ = model.decode_step(cfg, params, cache, last, klen)
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(out["logits"][:, -1]),
+                               atol=2e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_train_step_smoke(arch, rng):
+    """One jitted train step: finite loss, params updated, no NaNs."""
+    from repro.optim import AdamWConfig, constant
+    from repro import train as train_mod
+    cfg = configs.get(arch, reduced=True)
+    opt = AdamWConfig(weight_decay=0.01)
+    state = train_mod.make_state(cfg, opt, jax.random.PRNGKey(1))
+    step = jax.jit(train_mod.make_train_step(cfg, opt, constant(1e-3)))
+    bf, _, _ = _batches(cfg, rng)
+    new_state, metrics = step(state, bf)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_state["step"]) == 1
+    # at least one parameter must have moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new_state["params"])))
+    assert moved
+
+
+def test_full_config_param_counts():
+    """Analytic parameter counts land near the published sizes."""
+    from repro.launch.roofline import param_count
+    expected = {                     # non-embedding params, rough targets
+        "command-r-plus-104b": (95e9, 112e9),
+        "deepseek-v3-671b": (630e9, 690e9),
+        "olmo-1b": (0.9e9, 1.4e9),
+        "qwen3-moe-30b-a3b": (27e9, 32e9),
+        "rwkv6-3b": (2.5e9, 3.6e9),
+    }
+    for name, (lo, hi) in expected.items():
+        n = param_count(configs.get(name))
+        assert lo <= n <= hi, f"{name}: {n / 1e9:.1f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    from repro.launch.roofline import param_count
+    cfg = configs.get("qwen3-moe-30b-a3b")
+    active = param_count(cfg, active=True)
+    assert 2e9 <= active <= 4e9      # "A3B" = ~3B activated
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "recurrentgemma-9b"])
+def test_subquadratic_flags(arch):
+    assert configs.get(arch).subquadratic
+
+
+def test_quadratic_archs_skip_long():
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch)
+        ok, reason = configs.cell_supported(cfg, configs.SHAPES["long_500k"])
+        assert ok == cfg.subquadratic

@@ -1,0 +1,184 @@
+"""Multi-device behaviour on 8 fake CPU devices (subprocess: the flag must
+be set before jax initializes, and the main test process must keep its
+single-device view for the smoke tests)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_sub(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs, train as train_mod
+from repro.optim import AdamWConfig, constant
+from repro.launch.shardctx import ShardCtx
+from repro.sharding import TRAIN_RULES
+
+cfg = configs.get('olmo-1b', reduced=True)
+opt = AdamWConfig(clip_norm=None, weight_decay=0.0)
+rng = np.random.default_rng(0)
+b = {'tokens': jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)))}
+
+mesh = jax.make_mesh((4, 2), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+sc = ShardCtx(mesh, TRAIN_RULES)
+state = train_mod.make_state(cfg, opt, jax.random.PRNGKey(0))
+astate = train_mod.abstract_state(cfg, opt)
+slog = train_mod.state_logical(cfg, opt)
+state_sh = sc.tree(astate, slog)
+state = jax.device_put(state, state_sh)
+step = jax.jit(train_mod.make_train_step(cfg, opt, constant(1e-3), sc=sc),
+               in_shardings=(state_sh, None), out_shardings=(state_sh, None))
+_, m_sharded = step(state, b)
+
+state1 = train_mod.make_state(cfg, opt, jax.random.PRNGKey(0))
+step1 = jax.jit(train_mod.make_train_step(cfg, opt, constant(1e-3)))
+_, m_single = step1(state1, b)
+d = abs(float(m_sharded['loss']) - float(m_single['loss']))
+assert d < 1e-4, (float(m_sharded['loss']), float(m_single['loss']))
+print('OK', d)
+""")
+    assert "OK" in out
+
+
+def test_int8_psum_matches_psum():
+    out = run_sub(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.train.compress import int8_psum
+mesh = jax.make_mesh((2, 4), ('pod', 'data'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+x = jnp.asarray(np.random.default_rng(0).normal(size=(16, 64)).astype(np.float32))
+got = int8_psum(x, mesh, 'pod')
+want = x * 2  # replicated value summed over 2 pods
+rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+assert rel < 0.02, rel   # int8 wire quantization error bound
+print('OK', rel)
+""")
+    assert "OK" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    out = run_sub(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.sharding.pipeline import pipeline_apply, sequential_reference
+mesh = jax.make_mesh((4, 2), ('pipe', 'data'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+rng = np.random.default_rng(0)
+P_, M, mb, D = 4, 6, 3, 16
+params = {'w': jnp.asarray(rng.normal(size=(P_, D, D)).astype(np.float32) / np.sqrt(D)),
+          'b': jnp.asarray(rng.normal(size=(P_, D)).astype(np.float32))}
+xs = jnp.asarray(rng.normal(size=(M, mb, D)).astype(np.float32))
+
+def stage(p, x):
+    return jnp.tanh(x @ p['w'] + p['b'])
+
+got = pipeline_apply(mesh, 'pipe', stage, params, xs)
+want = sequential_reference(stage, params, xs, P_)
+err = float(jnp.max(jnp.abs(got - want)))
+assert err < 1e-5, err
+print('OK', err)
+""")
+    assert "OK" in out
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Checkpoint on a (4,2) mesh, restore onto (2,4) and single device."""
+    out = run_sub(rf"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import checkpoint, configs, train as train_mod
+from repro.optim import AdamWConfig
+from repro.launch.shardctx import ShardCtx
+from repro.sharding import TRAIN_RULES
+
+cfg = configs.get('olmo-1b', reduced=True)
+opt = AdamWConfig()
+state = train_mod.make_state(cfg, opt, jax.random.PRNGKey(0))
+astate = train_mod.abstract_state(cfg, opt)
+slog = train_mod.state_logical(cfg, opt)
+
+mesh_a = jax.make_mesh((4, 2), ('data', 'model'),
+                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+sh_a = ShardCtx(mesh_a, TRAIN_RULES).tree(astate, slog)
+state_a = jax.device_put(state, sh_a)
+checkpoint.save(r'{tmp_path}', 5, state_a)
+
+mesh_b = jax.make_mesh((2, 4), ('data', 'model'),
+                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+sh_b = ShardCtx(mesh_b, TRAIN_RULES).tree(astate, slog)
+state_b, at = checkpoint.restore_latest(r'{tmp_path}', astate, sh_b)
+assert at == 5
+for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(state_b)):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+# and unsharded restore
+state_c, _ = checkpoint.restore_latest(r'{tmp_path}', astate)
+for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(state_c)):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+print('OK elastic')
+""")
+    assert "OK elastic" in out
+
+
+def test_dryrun_cell_small_mesh():
+    """The dry-run machinery itself on an 8-device (4,2) mesh."""
+    out = run_sub(r"""
+import jax
+from repro import configs
+from repro.launch.specs import build_cell
+from repro.launch import hlo_cost
+
+mesh = jax.make_mesh((4, 2), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+for shape_name in ['train_4k', 'decode_32k']:
+    cfg = configs.get('olmo-1b', reduced=True)
+    import dataclasses
+    shape = dataclasses.replace(configs.SHAPES[shape_name],
+                                seq_len=256, global_batch=8)
+    cell = build_cell(cfg, shape, mesh)
+    comp = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                   out_shardings=cell.out_shardings,
+                   donate_argnums=cell.donate).lower(*cell.args).compile()
+    c = hlo_cost.analyze(comp.as_text(), 8)
+    assert c.flops > 0
+    assert comp.memory_analysis().temp_size_in_bytes > 0
+    print('OK', shape_name, c.flops)
+""")
+    assert out.count("OK") == 2
+
+
+def test_sharded_alignment_service():
+    """The paper's N_K channels sharded over a real (fake-)device mesh."""
+    out = run_sub(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.serve import AlignRequest, AlignmentService
+mesh = jax.make_mesh((8,), ('data',),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+svc = AlignmentService(max_len=64, block=8, mesh=mesh)
+rng = np.random.default_rng(0)
+for i in range(16):
+    svc.submit(AlignRequest(rid=i, kernel='local_affine',
+                            query=rng.integers(0,4,32).astype(np.uint8),
+                            ref=rng.integers(0,4,40).astype(np.uint8)))
+n = svc.drain()
+assert n == 16
+from repro.core import align, kernels_zoo
+spec, params = kernels_zoo.make('local_affine')
+print('OK', n)
+""")
+    assert "OK 16" in out

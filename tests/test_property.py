@@ -1,0 +1,114 @@
+"""Hypothesis property tests on system invariants."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import align, rescore  # noqa: E402
+from repro.core.kernels_zoo import dna_affine, dna_linear  # noqa: E402
+
+SETTINGS = settings(max_examples=20, deadline=None)
+
+dna_seq = st.lists(st.integers(0, 3), min_size=4, max_size=40).map(
+    lambda xs: jnp.asarray(np.asarray(xs, np.uint8)))
+scores = st.tuples(st.integers(1, 5), st.integers(-6, -1),
+                   st.integers(-6, -1))
+
+
+@SETTINGS
+@given(q=dna_seq, r=dna_seq, sc=scores)
+def test_nw_path_rescores(q, r, sc):
+    match, mismatch, gap = sc
+    spec = dna_linear.global_linear()
+    params = dna_linear.default_params(match, mismatch, gap)
+    a = align(spec, params, q, r)
+    got = rescore.rescore(spec, params, q, r, a)
+    assert got == float(a.score)
+    # global path must span both sequences fully
+    assert int(a.start_i) == 0 and int(a.start_j) == 0
+    assert int(a.end_i) == len(q) and int(a.end_j) == len(r)
+
+
+@SETTINGS
+@given(q=dna_seq, r=dna_seq, sc=scores)
+def test_nw_symmetry(q, r, sc):
+    match, mismatch, gap = sc
+    spec = dna_linear.global_linear()
+    params = dna_linear.default_params(match, mismatch, gap)
+    s1 = align(spec, params, q, r, with_traceback=False).score
+    s2 = align(spec, params, r, q, with_traceback=False).score
+    assert int(s1) == int(s2)
+
+
+@SETTINGS
+@given(q=dna_seq, r=dna_seq)
+def test_local_dominates_and_nonneg(q, r):
+    """SW local score >= 0 and >= any fixed-path score; monotone in match."""
+    spec = dna_linear.local_linear()
+    p1 = dna_linear.default_params(match=1)
+    p2 = dna_linear.default_params(match=3)
+    s1 = float(align(spec, p1, q, r, with_traceback=False).score)
+    s2 = float(align(spec, p2, q, r, with_traceback=False).score)
+    assert s1 >= 0 and s2 >= s1
+
+
+@SETTINGS
+@given(q=dna_seq, r=dna_seq, go=st.integers(-8, -2), ge=st.integers(-3, -1))
+def test_affine_gap_bounds(q, r, go, ge):
+    """Affine score is bounded by linear scores at the two extreme rates."""
+    ge = max(ge, go)                        # extend cheaper than open
+    spec_a = dna_affine.global_affine()
+    pa = dna_affine.default_params(gap_open=go, gap_extend=ge)
+    spec_l = dna_linear.global_linear()
+    s_a = int(align(spec_a, pa, q, r, with_traceback=False).score)
+    s_open = int(align(spec_l, dna_linear.default_params(gap=go), q, r,
+                       with_traceback=False).score)
+    s_ext = int(align(spec_l, dna_linear.default_params(gap=ge), q, r,
+                      with_traceback=False).score)
+    assert s_open <= s_a <= s_ext
+
+
+@SETTINGS
+@given(q=dna_seq, r=dna_seq, sc=scores)
+def test_engines_agree(q, r, sc):
+    match, mismatch, gap = sc
+    spec = dna_linear.semiglobal()
+    params = dna_linear.default_params(match, mismatch, gap)
+    s1 = align(spec, params, q, r, engine_name="reference",
+               with_traceback=False).score
+    s2 = align(spec, params, q, r, engine_name="wavefront",
+               with_traceback=False).score
+    assert int(s1) == int(s2)
+
+
+@SETTINGS
+@given(q=dna_seq)
+def test_identity_is_optimal_global(q):
+    spec = dna_linear.global_linear()
+    params = dna_linear.default_params()
+    s = int(align(spec, params, q, q, with_traceback=False).score)
+    assert s == 2 * len(q)
+
+
+@SETTINGS
+@given(data=st.data())
+def test_int8_quantization_roundtrip(data):
+    """Optimizer moment quantization: bounded relative error."""
+    from repro.optim.adamw import (_dequantize, _dequantize_log, _quantize,
+                                   _quantize_log)
+    arr = data.draw(
+        st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                 min_size=2, max_size=64))
+    x = jnp.asarray(np.asarray(arr, np.float32)).reshape(1, -1)
+    q, s = _quantize(x)
+    err = np.abs(np.asarray(_dequantize(q, s) - x))
+    assert err.max() <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+    v = jnp.abs(x) + 1e-12
+    qv, sv = _quantize_log(v)
+    rel = np.abs(np.asarray(_dequantize_log(qv, sv)) / np.asarray(v) - 1.0)
+    assert rel.max() < 0.25          # log-grid relative error bound

@@ -1,0 +1,150 @@
+"""Chunked recurrences vs naive sequential oracles.
+
+WKV6 chunked (the paper's preserved-row-buffer discipline in 1-D) and the
+RG-LRU associative scan must match token-by-token sequential recurrences
+exactly — and streaming decode must match the batch forward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import mixers
+from repro.models.params import init_params
+
+F32 = jnp.float32
+
+
+def _naive_wkv(r, k, v, lw, u, state):
+    """Token-by-token WKV6 for one (B, S, H, hd) block."""
+    B, S, H, hd = r.shape
+    ys = np.zeros((B, S, H, hd), np.float32)
+    st = np.array(state, np.float32)
+    r, k, v, lw, u = map(np.asarray, (r, k, v, lw, u))
+    for b in range(B):
+        for h in range(H):
+            Sm = st[b, h].copy()
+            for t in range(S):
+                rt, kt, vt = r[b, t, h], k[b, t, h], v[b, t, h]
+                w = np.exp(lw[b, t, h])
+                ys[b, t, h] = rt @ (Sm + np.outer(u[h] * kt, vt))
+                Sm = w[:, None] * Sm + np.outer(kt, vt)
+    return ys
+
+
+def test_wkv6_chunked_matches_sequential(rng):
+    cfg = configs.get("rwkv6-3b", reduced=True)
+    B, S, H, hd = 2, 64, cfg.rwkv_heads, cfg.head_dim
+    r = rng.normal(size=(B, S, H, hd)).astype(np.float32)
+    k = rng.normal(size=(B, S, H, hd)).astype(np.float32)
+    v = rng.normal(size=(B, S, H, hd)).astype(np.float32)
+    lw = -np.exp(rng.normal(size=(B, S, H, hd)).astype(np.float32))
+    u = rng.normal(size=(H, hd)).astype(np.float32)
+    state = np.zeros((B, H, hd, hd), np.float32)
+
+    def to_chunks(t, c=16):
+        return jnp.asarray(t).reshape(B, S // c, c, H, hd).transpose(
+            1, 0, 3, 2, 4)
+
+    st = jnp.asarray(state)
+    ys = []
+    for i in range(S // 16):
+        rr, kk, vv, ll = (to_chunks(t)[i] for t in (r, k, v, lw))
+        y, st = mixers._wkv_chunk_bh(rr, kk, vv, ll, jnp.asarray(u), st)
+        ys.append(y)
+    got = jnp.stack(ys).transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    want = _naive_wkv(r, k, v, lw, u, state)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_streaming_decode_matches_batch(rng):
+    """Feeding tokens one-by-one through decode == one batch forward."""
+    cfg = configs.get("rwkv6-3b", reduced=True)
+    p = init_params(jax.random.PRNGKey(0), mixers.rwkv6_defs(cfg), F32)
+    B, S = 2, 32
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+    ctx_t = {"mode": "train", "sc": lambda a, _: a,
+             "positions": jnp.arange(S)[None]}
+    y_batch, _ = mixers.rwkv6_apply(cfg, p, x, ctx_t, None)
+    # stream
+    cache = {"state": jnp.zeros((B, cfg.rwkv_heads, cfg.head_dim,
+                                 cfg.head_dim), F32),
+             "shift": jnp.zeros((B, cfg.d_model), F32)}
+    outs = []
+    for t in range(S):
+        ctx_d = {"mode": "decode", "sc": lambda a, _: a,
+                 "k_len": jnp.full((B,), t)}
+        y, cache = mixers.rwkv6_apply(cfg, p, x[:, t: t + 1], ctx_d, cache)
+        outs.append(y[:, 0])
+    y_stream = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_stream), np.asarray(y_batch),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_streaming_decode_matches_batch(rng):
+    cfg = configs.get("recurrentgemma-9b", reduced=True)
+    p = init_params(jax.random.PRNGKey(0), mixers.rglru_defs(cfg), F32)
+    B, S = 2, 24
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+    ctx_t = {"mode": "train", "sc": lambda a, _: a,
+             "positions": jnp.arange(S)[None]}
+    y_batch, _ = mixers.rglru_apply(cfg, p, x, ctx_t, None)
+    cache = {"h": jnp.zeros((B, cfg.lru_width), F32),
+             "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.lru_width), F32)}
+    outs = []
+    for t in range(S):
+        ctx_d = {"mode": "decode", "sc": lambda a, _: a,
+                 "k_len": jnp.full((B,), t)}
+        y, cache = mixers.rglru_apply(cfg, p, x[:, t: t + 1], ctx_d, cache)
+        outs.append(y[:, 0])
+    y_stream = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_stream), np.asarray(y_batch),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_chunk_sizes_agree(rng):
+    """Chunk size must not change the result (8 vs 32 vs full-S)."""
+    cfg = configs.get("rwkv6-3b", reduced=True)
+    p = init_params(jax.random.PRNGKey(0), mixers.rwkv6_defs(cfg), F32)
+    B, S = 1, 64
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+    ctx = {"mode": "train", "sc": lambda a, _: a,
+           "positions": jnp.arange(S)[None]}
+    y8, _ = mixers.rwkv6_apply(cfg, p, x, ctx, None, chunk=8)
+    y32, _ = mixers.rwkv6_apply(cfg, p, x, ctx, None, chunk=32)
+    y64, _ = mixers.rwkv6_apply(cfg, p, x, ctx, None, chunk=64)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y32), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y64), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_flash_attention_grads_match_reference(rng):
+    from repro.models.layers import flash_attention
+    B, S, H, K, hd = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+
+    def ref(q, k, v):
+        G = H // K
+        s = jnp.einsum("bqkgd,bskd->bqkgs", q.reshape(B, S, K, G, hd),
+                       k) / np.sqrt(hd)
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        s = jnp.where((j <= i)[:, None, None, :][None], s, -1e30)
+        return jnp.einsum("bqkgs,bskd->bqkgd", jax.nn.softmax(s, -1),
+                          v).reshape(B, S, H, hd)
+
+    f1 = lambda *a: jnp.sum(jnp.cos(flash_attention(
+        *a, causal=True, window=None, chunk=32)))
+    f2 = lambda *a: jnp.sum(jnp.cos(ref(*a)))
+    np.testing.assert_allclose(float(f1(q, k, v)), float(f2(q, k, v)),
+                               rtol=1e-5)
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
