@@ -6,13 +6,10 @@ claim on TPU for the same spec (the resource-utilization analogue).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import numpy as np
 
-from repro.core import batch as core_batch, kernels_zoo
-from .common import emit, kernel_batch, timeit
+from repro.core import kernels_zoo
+from .common import batched_plan, emit, kernel_batch, timeit
 
 N, NQ, NR = 16, 128, 128
 
@@ -37,10 +34,8 @@ def run(quick: bool = False):
         name, _, _ = kernels_zoo.KERNELS[kid]
         spec, params = kernels_zoo.make(kid)
         qs, rs, ql, rl = kernel_batch(rng, spec, n, NQ, NR)
-        fn = jax.jit(functools.partial(
-            core_batch.align_batch, spec, params,
-            with_traceback=spec.traceback is not None))
-        sec = timeit(fn, qs, rs, ql, rl)
+        fn = batched_plan(spec, n, NQ, NR)
+        sec = timeit(fn, params, qs, rs, ql, rl)
         aps = n / sec
         gcups = n * NQ * NR / sec / 1e9
         emit(f"table2/{kid:02d}_{name}", sec / n,

@@ -7,13 +7,10 @@
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import numpy as np
 
-from repro.core import batch as core_batch, kernels_zoo
-from .common import emit, kernel_batch, timeit
+from repro.core import kernels_zoo
+from .common import batched_plan, emit, kernel_batch, timeit
 
 
 def run(quick: bool = False):
@@ -23,18 +20,16 @@ def run(quick: bool = False):
         # N_B scaling (fixed 128x128 pairs)
         for nb in ([1, 4, 16] if quick else [1, 2, 4, 8, 16, 32]):
             qs, rs, ql, rl = kernel_batch(rng, spec, nb, 128, 128)
-            fn = jax.jit(functools.partial(core_batch.align_batch, spec,
-                                           params, with_traceback=False))
-            sec = timeit(fn, qs, rs, ql, rl)
+            fn = batched_plan(spec, nb, 128, 128, with_traceback=False)
+            sec = timeit(fn, params, qs, rs, ql, rl)
             emit(f"fig3/{kname}/nb_{nb:02d}", sec,
                  f"aligns_per_s={nb / sec:.0f} "
                  f"cells_per_s={nb * 128 * 128 / sec:.3e}")
         # N_PE analogue: wavefront width via sequence length
         for sl in ([64, 256] if quick else [32, 64, 128, 256, 512]):
             qs, rs, ql, rl = kernel_batch(rng, spec, 4, sl, sl)
-            fn = jax.jit(functools.partial(core_batch.align_batch, spec,
-                                           params, with_traceback=False))
-            sec = timeit(fn, qs, rs, ql, rl)
+            fn = batched_plan(spec, 4, sl, sl, with_traceback=False)
+            sec = timeit(fn, params, qs, rs, ql, rl)
             emit(f"fig3/{kname}/npe_{sl:03d}", sec,
                  f"cells_per_s={4 * sl * sl / sec:.3e}")
 

@@ -1,10 +1,25 @@
-"""Shared benchmark utilities: timing, data, CSV output."""
+"""Shared benchmark utilities: timing, data, CSV output, runtime plans."""
 from __future__ import annotations
 
 import time
 
 import jax
 import numpy as np
+
+
+def batched_plan(spec, n: int, nq: int, nr: int,
+                 engine_name: str = "wavefront", with_traceback=None):
+    """Batched CompiledPlan from the shared runtime cache.
+
+    All suites compile through ``repro.runtime`` so a shape measured here
+    is the same executable api/batch/serve would dispatch.
+    """
+    from repro.runtime import plan as plan_mod
+    if with_traceback is None:
+        with_traceback = spec.traceback is not None
+    char = spec.char_shape
+    return plan_mod.get_plan(spec, engine_name, (nq,) + char, (nr,) + char,
+                             batch_size=n, with_traceback=with_traceback)
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite plus the bucketing benchmark.
+# One entry point for builders and CI; run from the repo root.
+#
+#   scripts/tier1.sh            # everything (slow model/serve suites too)
+#   scripts/tier1.sh -m 'not slow'   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python -m benchmarks.run --quick --only bucketing

@@ -1,34 +1,52 @@
 """Public alignment API: spec + params + sequences -> Alignment.
 
-Engine selection mirrors the paper's flow: the 'reference' engine is the
-C-simulation oracle, 'wavefront' is the optimized back-end, and 'pallas'
-(see repro.kernels.wavefront) is the TPU kernel version of the same
-back-end schedule.
+Engine selection, compilation, and padding all route through
+``repro.runtime``: engines resolve by name in ``runtime.registry``
+(``reference`` is the C-simulation oracle, ``wavefront`` the optimized
+back-end, ``banded``/``pallas``/``pallas_interpret`` its variants), and
+top-level calls pad to a power-of-two length bucket and dispatch through
+the shared ``CompiledPlan`` cache — repeated mixed-length calls reuse one
+executable per ``(kernel, engine, bucket)``.  Calls already inside a
+trace (vmap/jit/scan) inline the same execution core instead.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from . import banded, engine, reference, traceback as tb_mod
+from repro.runtime import bucketing
+from repro.runtime import plan as plan_mod
+from repro.runtime import registry
+
 from . import types as T
 
-ENGINES = {
-    "reference": reference.run,
-    "wavefront": engine.run,
-    "banded": banded.run,         # O(n*W) band-packed lanes, score-only
-}
+
+def _fit_to_bucket(arr, bucket: int):
+    """Slice or zero-pad ``arr`` along axis 0 to exactly ``bucket``."""
+    n = arr.shape[0]
+    if n == bucket:
+        return arr
+    if n > bucket:
+        return arr[:bucket]
+    pad = jnp.zeros((bucket - n,) + arr.shape[1:], arr.dtype)
+    return jnp.concatenate([arr, pad], axis=0)
 
 
-def _get_engine(name: str):
-    if name in ENGINES:
-        return ENGINES[name]
-    if name in ("pallas", "pallas_interpret"):
-        from repro.kernels.wavefront import ops as wops  # lazy import
-        return functools.partial(wops.run, interpret=(name == "pallas_interpret"))
-    raise ValueError(f"unknown engine {name!r}; have {sorted(ENGINES)} + pallas")
+def _dispatch(spec, params, query, ref, q_len, r_len, engine_name,
+              with_traceback, mode):
+    """Concrete top-level call: pad to bucket, run the shared plan."""
+    query = jnp.asarray(query)
+    ref = jnp.asarray(ref)
+    q_len = int(query.shape[0] if q_len is None else q_len)
+    r_len = int(ref.shape[0] if r_len is None else r_len)
+    bq = bucketing.bucket_length(q_len)
+    br = bucketing.bucket_length(r_len)
+    # Effective lengths bound the live cells, so shapes can shrink to the
+    # bucket as well as grow — the plan key depends only on the bucket.
+    query = _fit_to_bucket(query, bq)
+    ref = _fit_to_bucket(ref, br)
+    plan = plan_mod.get_plan(spec, engine_name, query.shape, ref.shape,
+                             with_traceback=with_traceback, mode=mode)
+    return plan(params, query, ref, q_len, r_len)
 
 
 def align(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
@@ -36,13 +54,16 @@ def align(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
     """Run matrix fill + (optional) traceback for one sequence pair.
 
     Shapes are static (pad and pass ``q_len``/``r_len`` for shorter inputs);
-    jit-compatible and vmap-able over (query, ref, q_len, r_len).
+    jit-compatible and vmap-able over (query, ref, q_len, r_len).  Top-level
+    concrete calls are padded to a length bucket and served from the shared
+    ``CompiledPlan`` cache.
     """
-    res = _get_engine(engine_name)(spec, params, query, ref, q_len, r_len)
-    if with_traceback and spec.traceback is not None:
-        max_len = query.shape[0] + ref.shape[0] + 1
-        return tb_mod.run(spec, res, max_len)
-    return T.Alignment(score=res.score, end_i=res.end_i, end_j=res.end_j)
+    if plan_mod.is_traced(params, query, ref, q_len, r_len):
+        return plan_mod.align_impl(spec, registry.get_engine(engine_name),
+                                   params, query, ref, q_len, r_len,
+                                   with_traceback=with_traceback)
+    return _dispatch(spec, params, query, ref, q_len, r_len, engine_name,
+                     with_traceback, mode="align")
 
 
 def score_only(spec, params, query, ref, q_len=None, r_len=None,
@@ -53,4 +74,8 @@ def score_only(spec, params, query, ref, q_len=None, r_len=None,
 
 def fill(spec, params, query, ref, q_len=None, r_len=None,
          engine_name: str = "wavefront") -> T.DPResult:
-    return _get_engine(engine_name)(spec, params, query, ref, q_len, r_len)
+    if plan_mod.is_traced(params, query, ref, q_len, r_len):
+        return registry.get_engine(engine_name)(spec, params, query, ref,
+                                                q_len, r_len)
+    return _dispatch(spec, params, query, ref, q_len, r_len, engine_name,
+                     with_traceback=False, mode="fill")

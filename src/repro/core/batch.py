@@ -1,37 +1,48 @@
 """Outer-loop parallelism — the N_B / N_K analogue (paper §5.3).
 
-``align_batch`` vmaps one kernel over many sequence pairs (N_B blocks in one
-device); ``make_sharded_aligner`` shard_maps the batch over the mesh 'data'
-axis (N_K independent channels).  Heterogeneous kernels can be linked by
-building several sharded aligners over the same mesh — the OpenCL-arbiter
-role is played by serve/alignment_service.py.
+``align_batch`` runs one kernel over many sequence pairs (N_B blocks in one
+device): concrete top-level calls dispatch a batched ``CompiledPlan`` from
+the shared runtime cache; traced calls (inside jit/shard_map) inline a
+vmap of the same execution core.  ``make_sharded_aligner`` shard_maps the
+batch over the mesh 'data' axis (N_K independent channels).  Heterogeneous
+kernels can be linked by building several sharded aligners over the same
+mesh — the OpenCL-arbiter role is played by serve/alignment_service.py.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from . import api
+from repro.runtime import plan as plan_mod
+from repro.runtime import registry
+
 from . import types as T
 
 
 def align_batch(spec: T.DPKernelSpec, params, queries, refs,
                 q_lens=None, r_lens=None, engine_name: str = "wavefront",
                 with_traceback: bool = True):
-    """vmap over the leading (pair) axis.  queries: (N, Lq, *char), refs:
-    (N, Lr, *char); q_lens/r_lens: (N,) effective lengths (None = full)."""
+    """vmap one kernel over the leading (pair) axis.  queries: (N, Lq,
+    *char), refs: (N, Lr, *char); q_lens/r_lens: (N,) effective lengths
+    (None = full)."""
     n = queries.shape[0]
     if q_lens is None:
         q_lens = jnp.full((n,), queries.shape[1], jnp.int32)
     if r_lens is None:
         r_lens = jnp.full((n,), refs.shape[1], jnp.int32)
-    fn = functools.partial(api.align, spec, params, engine_name=engine_name,
-                           with_traceback=with_traceback)
-    return jax.vmap(fn)(queries, refs, q_lens, r_lens)
+    if plan_mod.is_traced(params, queries, refs, q_lens, r_lens):
+        engine_fn = registry.get_engine(engine_name)
+        fn = functools.partial(plan_mod.align_impl, spec, engine_fn,
+                               with_traceback=with_traceback)
+        return jax.vmap(fn, in_axes=(None, 0, 0, 0, 0))(
+            params, queries, refs, q_lens, r_lens)
+    plan = plan_mod.get_plan(spec, engine_name, queries.shape[1:],
+                             refs.shape[1:], batch_size=n,
+                             with_traceback=with_traceback)
+    return plan(params, queries, refs, q_lens, r_lens)
 
 
 def make_sharded_aligner(spec: T.DPKernelSpec, mesh, axis: str = "data",
@@ -40,7 +51,9 @@ def make_sharded_aligner(spec: T.DPKernelSpec, mesh, axis: str = "data",
     """Return a jitted aligner whose batch axis is sharded over ``axis``.
 
     The global batch must divide the axis size; each device group runs an
-    independent channel (N_K) of vmapped blocks (N_B).
+    independent channel (N_K) of vmapped blocks (N_B).  The engine still
+    resolves through the runtime registry; the sharded executable keeps
+    its own jit because its identity includes the mesh/shardings.
     """
     batch_sharding = NamedSharding(mesh, P(axis))
     repl = NamedSharding(mesh, P())

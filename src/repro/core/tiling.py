@@ -12,11 +12,12 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import api, types as T
+from repro.runtime import plan as plan_mod
+
+from . import types as T
 from .traceback import path_cells
 
 
@@ -33,26 +34,24 @@ def tiled_align(spec: T.DPKernelSpec, params, query, ref, tile: int = 128,
     """Drive fixed-size tile alignments across a long (query, ref) pair.
 
     ``spec`` must be a global-style kernel with traceback (e.g. #2).  Two
-    jit-compiled variants are used: interior tiles trace back from the best
-    far-boundary cell (overlap region), the final tile from the corner.
+    compiled-plan variants are used: interior tiles trace back from the
+    best far-boundary cell (overlap region), the final tile from the
+    corner.  Both come from the shared runtime cache, so repeated
+    ``tiled_align`` calls (and any other caller at the same tile shape)
+    reuse the same executables.
     """
     assert spec.traceback is not None and spec.region == T.REGION_CORNER
     interior_spec = dataclasses.replace(
         spec, region=T.REGION_LAST_ROW_COL,
         traceback=dataclasses.replace(spec.traceback, stop=T.STOP_ORIGIN))
 
-    @jax.jit
-    def tile_interior(q_t, r_t, ql, rl):
-        return api.align(interior_spec, params, q_t, r_t, ql, rl,
-                         engine_name=engine_name)
-
-    @jax.jit
-    def tile_final(q_t, r_t, ql, rl):
-        return api.align(spec, params, q_t, r_t, ql, rl,
-                         engine_name=engine_name)
-
     query = np.asarray(query)
     ref = np.asarray(ref)
+    q_shape = (tile,) + query.shape[1:]
+    r_shape = (tile,) + ref.shape[1:]
+    tile_interior = plan_mod.get_plan(interior_spec, engine_name,
+                                      q_shape, r_shape)
+    tile_final = plan_mod.get_plan(spec, engine_name, q_shape, r_shape)
     Q, R = len(query), len(ref)
     qi = rj = 0
     all_moves: list[int] = []
@@ -77,7 +76,7 @@ def tiled_align(spec: T.DPKernelSpec, params, query, ref, tile: int = 128,
         r_t[:rl] = ref[rj:rj + rl]
         last = (qi + ql >= Q) and (rj + rl >= R)
         fn = tile_final if last else tile_interior
-        a = fn(jnp.asarray(q_t), jnp.asarray(r_t), ql, rl)
+        a = fn(params, jnp.asarray(q_t), jnp.asarray(r_t), ql, rl)
         cells = path_cells(a)                      # start->end cells
         moves = [int(m) for m in np.asarray(a.moves)[: int(a.n_moves)]][::-1]
         assert int(a.start_i) == 0 and int(a.start_j) == 0, (

@@ -1,0 +1,12 @@
+"""Pallas-TPU API drift shims shared by all kernels.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` across
+jax versions; resolve whichever the installed jax provides once, here,
+instead of per-kernel version checks.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 from repro.core.spec_utils import band_mask, region_mask
 
 
@@ -105,8 +107,10 @@ def _kernel_body(spec, n_pe, treedef, leaf_shapes,
         cur = jnp.where(valid[:, None], scores, sent)
 
         # coalesced TB store: one contiguous lane-vector per wavefront
-        pl.store(tb_ref, (0, slice(None), pl.ds(w, 1)),
-                 jnp.where(valid, ptr, jnp.uint8(0))[:, None])
+        # (int indices must be pl.ds slices: older pallas interpret-mode
+        # discharge rules only accept Slice/array indices)
+        pl.store(tb_ref, (pl.ds(0, 1), slice(None), pl.ds(w, 1)),
+                 jnp.where(valid, ptr, jnp.uint8(0))[None, :, None])
 
         # preserved-row buffer: the strip's last PE exports its row
         j_last = w - (n_pe - 1) + 1
@@ -186,7 +190,7 @@ def wavefront_fill(spec, params, query, ref, lens, n_pe: int = 128,
         out_shape=out_shapes,
         scratch_shapes=[pltpu.VMEM((R + 1, L), dt)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
     )
     return fn(jnp.asarray(lens, jnp.int32), query, ref, init_row, init_col,

@@ -1,0 +1,23 @@
+"""repro.runtime — the shared alignment runtime (engine registry,
+compiled-plan cache, length-bucketed batching).
+
+This is the fixed back-end of DP-HLS §5 recast as a software layer: every
+caller (core.api, core.batch, core.tiling, serve, benchmarks) resolves its
+engine through one registry, compiles through one plan cache, and pads
+through one bucketing policy — instead of five independent jit call sites
+and a global max_len pad.
+"""
+from .registry import (Engine, available_engines, get_engine,
+                       register_engine)
+from .plan import (CompiledPlan, align_impl, clear_plan_cache, get_plan,
+                   plan_cache_info)
+from .bucketing import (Bucket, bucket_length, bucket_shape,
+                        inverse_permutation, pack_by_bucket, pad_to_bucket)
+
+__all__ = [
+    "Engine", "available_engines", "get_engine", "register_engine",
+    "CompiledPlan", "align_impl", "clear_plan_cache", "get_plan",
+    "plan_cache_info",
+    "Bucket", "bucket_length", "bucket_shape", "inverse_permutation",
+    "pack_by_bucket", "pad_to_bucket",
+]

@@ -1,0 +1,184 @@
+"""CompiledPlan: one shared compile cache for matrix fill + traceback.
+
+The paper synthesizes one fixed back-end per kernel configuration and
+reuses it for every block/channel; the JAX analogue is one jitted
+``fill (+ traceback)`` executable per ``(kernel, engine, bucket_shape,
+batch_size, with_traceback)`` — memoized here so api/batch/serve/tiling/
+benchmarks share a single cache instead of five independent ``jax.jit``
+call sites, each re-tracing the same schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.types as T
+import repro.core.traceback as tb_mod
+
+from . import registry
+
+
+def is_traced(*trees) -> bool:
+    """True if any leaf of the given pytrees is a jax tracer — i.e. the
+    caller is already inside a jit/vmap/scan trace and must inline
+    rather than dispatch a CompiledPlan."""
+    return any(isinstance(leaf, jax.core.Tracer)
+               for tree in trees for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def align_impl(spec: T.DPKernelSpec, engine_fn: Callable, params,
+               query, ref, q_len=None, r_len=None,
+               with_traceback: bool = True):
+    """Traceable fill + (optional) traceback for one pair.
+
+    This is the single execution core: CompiledPlan jits it, and callers
+    already inside a trace (vmap/jit/scan) inline it directly.
+    """
+    res = engine_fn(spec, params, query, ref, q_len, r_len)
+    if with_traceback and spec.traceback is not None:
+        max_len = query.shape[0] + ref.shape[0] + 1
+        return tb_mod.run(spec, res, max_len)
+    return T.Alignment(score=res.score, end_i=res.end_i, end_j=res.end_j)
+
+
+def fill_impl(spec: T.DPKernelSpec, engine_fn: Callable, params,
+              query, ref, q_len=None, r_len=None) -> T.DPResult:
+    return engine_fn(spec, params, query, ref, q_len, r_len)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Human-readable identity of a compiled plan (for cache_info)."""
+    kernel: str
+    engine: str
+    bucket_shape: tuple              # ((Lq, *char), (Lr, *char))
+    batch_size: Optional[int]        # None = single pair
+    with_traceback: bool
+    mode: str = "align"              # 'align' | 'fill'
+
+
+class CompiledPlan:
+    """A jitted alignment executable for one fixed input shape.
+
+    Call as ``plan(params, query, ref, q_len, r_len)`` (arrays already
+    padded to ``bucket_shape``; lengths scalar for single mode, ``(B,)``
+    for batch mode).  ``calls`` counts dispatches into the shared
+    executable.
+    """
+
+    def __init__(self, key: PlanKey, spec: T.DPKernelSpec,
+                 engine_name: str, donate: bool = False):
+        self.key = key
+        self.spec = spec
+        self.calls = 0
+        engine_fn = registry.get_engine(engine_name)
+        mode = key.mode
+        wtb = key.with_traceback
+
+        def single(params, query, ref, q_len, r_len):
+            if mode == "fill":
+                return fill_impl(spec, engine_fn, params, query, ref,
+                                 q_len, r_len)
+            return align_impl(spec, engine_fn, params, query, ref,
+                              q_len, r_len, with_traceback=wtb)
+
+        if key.batch_size is None:
+            fn = single
+        else:
+            def fn(params, queries, refs, q_lens, r_lens):
+                return jax.vmap(single, in_axes=(None, 0, 0, 0, 0))(
+                    params, queries, refs, q_lens, r_lens)
+
+        # Buffer donation is only safe when the caller hands over freshly
+        # padded copies (the bucketed batch paths do); XLA:CPU does not
+        # implement donation, so gate on backend to avoid warnings.
+        donate_argnums = ()
+        if donate and jax.default_backend() != "cpu":
+            donate_argnums = (1, 2)
+        self._fn = jax.jit(fn, donate_argnums=donate_argnums)
+
+    @property
+    def batch_size(self):
+        return self.key.batch_size
+
+    def __call__(self, params, query, ref, q_len=None, r_len=None):
+        q_shape, r_shape = self.key.bucket_shape
+        if self.key.batch_size is None:
+            q_len = q_shape[0] if q_len is None else q_len
+            r_len = r_shape[0] if r_len is None else r_len
+            q_len = jnp.asarray(q_len, jnp.int32)
+            r_len = jnp.asarray(r_len, jnp.int32)
+        else:
+            n = self.key.batch_size
+            if q_len is None:
+                q_len = jnp.full((n,), q_shape[0], jnp.int32)
+            if r_len is None:
+                r_len = jnp.full((n,), r_shape[0], jnp.int32)
+            q_len = jnp.asarray(q_len, jnp.int32)
+            r_len = jnp.asarray(r_len, jnp.int32)
+        self.calls += 1
+        return self._fn(params, query, ref, q_len, r_len)
+
+    def __repr__(self):
+        return f"CompiledPlan({self.key}, calls={self.calls})"
+
+
+# ---------------------------------------------------------------------------
+# The shared cache.
+# ---------------------------------------------------------------------------
+_CACHE: dict[tuple, CompiledPlan] = {}
+_LOCK = threading.Lock()
+_STATS = {"hits": 0, "misses": 0}
+
+
+def get_plan(spec: T.DPKernelSpec, engine_name: str,
+             q_shape: tuple, r_shape: tuple, *,
+             batch_size: Optional[int] = None,
+             with_traceback: bool = True, mode: str = "align",
+             donate: bool = False) -> CompiledPlan:
+    """Fetch (or build) the shared plan for one bucketed input shape.
+
+    ``q_shape``/``r_shape`` are per-pair shapes including char dims (the
+    bucket shape); ``batch_size=None`` compiles the single-pair variant.
+    The spec object itself keys the cache (two specs made by the same
+    ``kernels_zoo.make`` call share; distinct constructions do not —
+    their closures could differ).
+    """
+    wtb = bool(with_traceback and spec.traceback is not None)
+    if jax.default_backend() == "cpu":
+        donate = False   # donation is a no-op on CPU; don't split the cache
+    cache_key = (spec, engine_name, tuple(q_shape), tuple(r_shape),
+                 batch_size, wtb, mode, donate)
+    plan = _CACHE.get(cache_key)
+    if plan is not None:
+        _STATS["hits"] += 1
+        return plan
+    with _LOCK:
+        plan = _CACHE.get(cache_key)
+        if plan is None:
+            _STATS["misses"] += 1
+            key = PlanKey(kernel=spec.name, engine=engine_name,
+                          bucket_shape=(tuple(q_shape), tuple(r_shape)),
+                          batch_size=batch_size, with_traceback=wtb,
+                          mode=mode)
+            plan = CompiledPlan(key, spec, engine_name, donate=donate)
+            _CACHE[cache_key] = plan
+        else:
+            _STATS["hits"] += 1
+    return plan
+
+
+def plan_cache_info() -> dict[str, Any]:
+    return {"size": len(_CACHE), "hits": _STATS["hits"],
+            "misses": _STATS["misses"],
+            "keys": [p.key for p in _CACHE.values()]}
+
+
+def clear_plan_cache() -> None:
+    with _LOCK:
+        _CACHE.clear()
+        _STATS["hits"] = _STATS["misses"] = 0

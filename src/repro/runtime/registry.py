@@ -1,0 +1,106 @@
+"""Engine registry: every matrix-fill back-end resolves through here.
+
+An *engine* is the paper's fixed systolic back-end behind the declarative
+front-end: a callable ``fn(spec, params, query, ref, q_len, r_len) ->
+DPResult``.  The registry replaces the old ``core.api.ENGINES`` dict plus
+its lazy pallas special-casing: built-ins register with a deferred loader
+(so importing this module pulls in neither the engine modules nor pallas),
+and new engines plug in with :func:`register_engine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Optional, Protocol
+
+
+class Engine(Protocol):
+    """Matrix-fill back-end: spec + params + padded sequences -> DPResult."""
+
+    def __call__(self, spec, params, query, ref, q_len=None, r_len=None):
+        ...
+
+
+@dataclasses.dataclass
+class _Entry:
+    name: str
+    fn: Optional[Callable] = None        # resolved engine
+    loader: Optional[Callable] = None    # deferred constructor
+    doc: str = ""
+
+
+_REGISTRY: dict[str, _Entry] = {}
+_LOCK = threading.Lock()
+
+
+def register_engine(name: str, fn: Optional[Callable] = None, *,
+                    loader: Optional[Callable] = None, doc: str = "",
+                    overwrite: bool = False) -> None:
+    """Register engine ``name`` either eagerly (``fn``) or deferred
+    (``loader() -> fn``, imported/built on first :func:`get_engine`)."""
+    if (fn is None) == (loader is None):
+        raise ValueError("pass exactly one of fn= or loader=")
+    with _LOCK:
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(f"engine {name!r} already registered")
+        _REGISTRY[name] = _Entry(name=name, fn=fn, loader=loader, doc=doc)
+
+
+def get_engine(name: str) -> Callable:
+    """Resolve an engine by name, materializing deferred loaders once."""
+    entry = _REGISTRY.get(name)
+    if entry is None:
+        raise ValueError(
+            f"unknown engine {name!r}; have {available_engines()}")
+    if entry.fn is None:
+        with _LOCK:
+            if entry.fn is None:
+                entry.fn = entry.loader()
+    return entry.fn
+
+
+def available_engines() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def engine_doc(name: str) -> str:
+    entry = _REGISTRY.get(name)
+    return entry.doc if entry else ""
+
+
+# ---------------------------------------------------------------------------
+# Built-ins.  All deferred: the registry stays import-light and the pallas
+# engines only touch jax.experimental.pallas when actually requested.
+# ---------------------------------------------------------------------------
+def _load_reference():
+    from repro.core import reference
+    return reference.run
+
+
+def _load_wavefront():
+    from repro.core import engine
+    return engine.run
+
+
+def _load_banded():
+    from repro.core import banded
+    return banded.run
+
+
+def _load_pallas(interpret: bool):
+    import functools
+
+    from repro.kernels.wavefront import ops as wops
+    return functools.partial(wops.run, interpret=interpret)
+
+
+register_engine("reference", loader=_load_reference,
+                doc="row-major oracle (C-simulation analogue)")
+register_engine("wavefront", loader=_load_wavefront,
+                doc="anti-diagonal scan back-end (paper §5.1)")
+register_engine("banded", loader=_load_banded,
+                doc="O(n*W) band-packed lanes, score-only")
+register_engine("pallas", loader=lambda: _load_pallas(False),
+                doc="Pallas TPU kernel of the wavefront schedule")
+register_engine("pallas_interpret", loader=lambda: _load_pallas(True),
+                doc="Pallas kernel in interpreter mode (CPU-testable)")

@@ -1,26 +1,30 @@
 """The paper's accelerator as a service: batched DP alignment over a mesh.
 
 This is the N_K x N_B arbiter of DP-HLS §5.3 at pod scale: requests queue
-up per kernel type (heterogeneous kernels = multiple channels, exactly the
-paper's "mix of global and local aligners"), are padded into fixed-shape
-batches (N_B blocks), and dispatched to a jitted aligner whose batch axis
-is sharded over the mesh 'data' axis (N_K channels).  A heartbeat-driven
-deadline re-dispatches batches whose worker goes quiet (ft.heartbeat) —
-the straggler story the FPGA host code never needed but a 1000-node
-deployment does.
+up per ``(kernel, length-bucket)`` channel (heterogeneous kernels =
+multiple channels, exactly the paper's "mix of global and local
+aligners"), are padded to their *bucket* — not a global ``max_len`` — and
+dispatched through the shared ``repro.runtime`` compiled-plan cache (or a
+sharded aligner over the mesh 'data' axis: N_K channels).  A 40-base
+query therefore pays the wavefront cost of a 64-cell bucket, not of the
+service-wide maximum.  A heartbeat-driven deadline re-dispatches batches
+whose worker goes quiet (ft.heartbeat) — the straggler story the FPGA
+host code never needed but a 1000-node deployment does.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import batch as core_batch, kernels_zoo, types as T
+from repro.core import batch as core_batch, kernels_zoo
 from repro.core.traceback import moves_to_cigar
 from repro.ft import HeartbeatMonitor
+from repro.runtime import bucketing
+from repro.runtime import plan as plan_mod
 
 
 @dataclasses.dataclass
@@ -32,54 +36,63 @@ class AlignRequest:
     result: Optional[dict] = None
 
 
+QueueKey = Tuple[str, Tuple[int, int]]   # (kernel, (q_bucket, r_bucket))
+
+
 class AlignmentService:
     """Single-process reference implementation of the dispatch logic.
 
-    ``mesh=None`` runs un-sharded (CPU smoke); with a mesh, each kernel
-    channel jits a sharded aligner over the 'data' axis.
+    ``mesh=None`` runs un-sharded (CPU smoke) through the runtime plan
+    cache; with a mesh, each kernel channel jits a sharded aligner over
+    the 'data' axis.  ``max_len`` caps the largest bucket; ``min_bucket``
+    floors the smallest.
     """
 
     def __init__(self, max_len: int = 256, block: int = 8, mesh=None,
                  engine_name: str = "wavefront", with_traceback: bool = True,
-                 redispatch_after: float = 60.0):
+                 redispatch_after: float = 60.0,
+                 min_bucket: int = bucketing.DEFAULT_MIN_BUCKET):
         self.max_len, self.block = max_len, block
+        self.min_bucket = min(min_bucket, max_len)
         self.mesh = mesh
         self.engine_name = engine_name
         self.with_traceback = with_traceback
-        self.queues: Dict[str, List[AlignRequest]] = {}
-        self.channels: Dict[str, tuple] = {}
+        self.queues: Dict[QueueKey, List[AlignRequest]] = {}
+        self.channels: Dict[str, tuple] = {}   # kernel -> (spec, params, fn)
         self.monitor = HeartbeatMonitor(dead_after=redispatch_after)
         self.inflight: Dict[str, tuple] = {}   # worker -> (kernel, batch)
+        # per-batch shape telemetry, bounded so a long-lived service
+        # doesn't accumulate host memory
+        self.dispatches = collections.deque(maxlen=4096)
+
+    def _bucket(self, req: AlignRequest) -> Tuple[int, int]:
+        return bucketing.bucket_shape(
+            len(req.query), len(req.ref),
+            min_bucket=self.min_bucket, max_bucket=self.max_len)
 
     def _channel(self, kernel: str):
+        """Per-kernel spec/params (+ sharded aligner when on a mesh)."""
         if kernel not in self.channels:
             spec, params = kernels_zoo.make(kernel)
+            fn = None
             if self.mesh is not None:
                 fn = core_batch.make_sharded_aligner(
                     spec, self.mesh, engine_name=self.engine_name,
                     with_traceback=self.with_traceback and
                     spec.traceback is not None)
-            else:
-                import jax
-
-                def fn(params, q, r, ql, rl, _spec=spec):
-                    return core_batch.align_batch(
-                        _spec, params, q, r, ql, rl,
-                        engine_name=self.engine_name,
-                        with_traceback=self.with_traceback and
-                        _spec.traceback is not None)
-                fn = jax.jit(fn)
             self.channels[kernel] = (spec, params, fn)
         return self.channels[kernel]
 
     def submit(self, req: AlignRequest):
-        self.queues.setdefault(req.kernel, []).append(req)
+        key = (req.kernel, self._bucket(req))
+        self.queues.setdefault(key, []).append(req)
 
-    def _pad_batch(self, reqs: List[AlignRequest], char_shape, dtype):
+    def _pad_batch(self, reqs: List[AlignRequest], bucket: Tuple[int, int],
+                   char_shape, dtype):
         n = self.block
-        L = self.max_len
-        qs = np.zeros((n, L) + char_shape, dtype)
-        rs = np.zeros((n, L) + char_shape, dtype)
+        Lq, Lr = bucket
+        qs = np.zeros((n, Lq) + char_shape, dtype)
+        rs = np.zeros((n, Lr) + char_shape, dtype)
         ql = np.zeros((n,), np.int32)
         rl = np.zeros((n,), np.int32)
         for i, r in enumerate(reqs):
@@ -92,31 +105,47 @@ class AlignmentService:
         rl[len(reqs):] = 1
         return qs, rs, ql, rl
 
+    def _dispatch(self, kernel: str, bucket: Tuple[int, int],
+                  reqs: List[AlignRequest]):
+        spec, params, sharded_fn = self._channel(kernel)
+        qs, rs, ql, rl = self._pad_batch(
+            reqs, bucket, spec.char_shape,
+            np.dtype(jnp.dtype(spec.char_dtype).name))
+        self.dispatches.append({"kernel": kernel, "bucket": bucket,
+                                "n": len(reqs)})
+        if sharded_fn is not None:
+            out = sharded_fn(params, jnp.asarray(qs), jnp.asarray(rs),
+                             jnp.asarray(ql), jnp.asarray(rl))
+        else:
+            plan = plan_mod.get_plan(
+                spec, self.engine_name, qs.shape[1:], rs.shape[1:],
+                batch_size=self.block,
+                with_traceback=self.with_traceback and
+                spec.traceback is not None,
+                donate=True)
+            out = plan(params, jnp.asarray(qs), jnp.asarray(rs),
+                       jnp.asarray(ql), jnp.asarray(rl))
+        for i, r in enumerate(reqs):
+            res = {"score": float(np.asarray(out.score)[i]),
+                   "end": (int(np.asarray(out.end_i)[i]),
+                           int(np.asarray(out.end_j)[i]))}
+            if getattr(out, "moves", None) is not None:
+                res["cigar"] = moves_to_cigar(
+                    np.asarray(out.moves)[i],
+                    int(np.asarray(out.n_moves)[i]))
+            r.result = res
+        return len(reqs)
+
     def drain(self, worker: str = "w0") -> int:
         """Process all queued requests; returns #completed."""
         done = 0
-        for kernel, queue in list(self.queues.items()):
-            spec, params, fn = self._channel(kernel)
+        for (kernel, bucket), queue in list(self.queues.items()):
             while queue:
                 reqs = [queue.pop(0) for _ in range(min(self.block,
                                                         len(queue)))]
                 self.monitor.beat(worker)
                 self.inflight[worker] = (kernel, reqs)
-                qs, rs, ql, rl = self._pad_batch(
-                    reqs, spec.char_shape,
-                    np.dtype(jnp.dtype(spec.char_dtype).name))
-                out = fn(params, jnp.asarray(qs), jnp.asarray(rs),
-                         jnp.asarray(ql), jnp.asarray(rl))
-                for i, r in enumerate(reqs):
-                    res = {"score": float(np.asarray(out.score)[i]),
-                           "end": (int(np.asarray(out.end_i)[i]),
-                                   int(np.asarray(out.end_j)[i]))}
-                    if out.moves is not None:
-                        res["cigar"] = moves_to_cigar(
-                            np.asarray(out.moves)[i],
-                            int(np.asarray(out.n_moves)[i]))
-                    r.result = res
-                    done += 1
+                done += self._dispatch(kernel, bucket, reqs)
                 del self.inflight[worker]
                 self.monitor.beat(worker)
         return done
@@ -126,7 +155,8 @@ class AlignmentService:
         n = 0
         for worker, (kernel, reqs) in list(self.inflight.items()):
             if self.monitor.status(worker, now) == "dead":
-                self.queues.setdefault(kernel, []).extend(reqs)
+                for r in reqs:
+                    self.submit(r)
                 del self.inflight[worker]
                 n += len(reqs)
         return n

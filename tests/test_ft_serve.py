@@ -70,9 +70,12 @@ def test_alignment_service_redispatch():
                                         np.zeros(4, np.uint8))])
     assert svc.redispatch_dead(now=1.0) == 0        # still alive
     assert svc.redispatch_dead(now=20.0) == 1       # dead -> requeued
-    assert len(svc.queues["global_affine"]) == 1
+    requeued = [r for (k, _), q in svc.queues.items()
+                if k == "global_affine" for r in q]
+    assert len(requeued) == 1
 
 
+@pytest.mark.slow   # loads a reduced LM
 def test_serve_session_matches_direct_rollout(rng):
     """Slot-based decode == direct greedy rollout via forward()."""
     import jax.numpy as jnp
@@ -95,6 +98,7 @@ def test_serve_session_matches_direct_rollout(rng):
     assert done and done[0].out == want
 
 
+@pytest.mark.slow   # loads a reduced LM
 def test_serve_session_multi_slot(rng):
     from repro.models import get_model
     cfg = configs.get("olmo-1b", reduced=True)

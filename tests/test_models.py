@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute model/serve suites
+
 from repro import configs
 from repro.models import get_model, lm
 

@@ -10,6 +10,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute model/serve suites
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -26,6 +28,7 @@ def run_sub(code: str, devices: int = 8) -> str:
 def test_sharded_train_step_matches_single_device():
     out = run_sub(r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro import configs, train as train_mod
 from repro.optim import AdamWConfig, constant
 from repro.launch.shardctx import ShardCtx
@@ -36,8 +39,7 @@ opt = AdamWConfig(clip_norm=None, weight_decay=0.0)
 rng = np.random.default_rng(0)
 b = {'tokens': jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)))}
 
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ('data', 'model'))
 sc = ShardCtx(mesh, TRAIN_RULES)
 state = train_mod.make_state(cfg, opt, jax.random.PRNGKey(0))
 astate = train_mod.abstract_state(cfg, opt)
@@ -61,9 +63,9 @@ print('OK', d)
 def test_int8_psum_matches_psum():
     out = run_sub(r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.train.compress import int8_psum
-mesh = jax.make_mesh((2, 4), ('pod', 'data'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ('pod', 'data'))
 x = jnp.asarray(np.random.default_rng(0).normal(size=(16, 64)).astype(np.float32))
 got = int8_psum(x, mesh, 'pod')
 want = x * 2  # replicated value summed over 2 pods
@@ -77,9 +79,9 @@ print('OK', rel)
 def test_pipeline_parallel_matches_sequential():
     out = run_sub(r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.sharding.pipeline import pipeline_apply, sequential_reference
-mesh = jax.make_mesh((4, 2), ('pipe', 'data'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ('pipe', 'data'))
 rng = np.random.default_rng(0)
 P_, M, mb, D = 4, 6, 3, 16
 params = {'w': jnp.asarray(rng.normal(size=(P_, D, D)).astype(np.float32) / np.sqrt(D)),
@@ -102,6 +104,7 @@ def test_elastic_reshard_roundtrip(tmp_path):
     """Checkpoint on a (4,2) mesh, restore onto (2,4) and single device."""
     out = run_sub(rf"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro import checkpoint, configs, train as train_mod
 from repro.optim import AdamWConfig
 from repro.launch.shardctx import ShardCtx
@@ -113,14 +116,12 @@ state = train_mod.make_state(cfg, opt, jax.random.PRNGKey(0))
 astate = train_mod.abstract_state(cfg, opt)
 slog = train_mod.state_logical(cfg, opt)
 
-mesh_a = jax.make_mesh((4, 2), ('data', 'model'),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_a = make_mesh((4, 2), ('data', 'model'))
 sh_a = ShardCtx(mesh_a, TRAIN_RULES).tree(astate, slog)
 state_a = jax.device_put(state, sh_a)
 checkpoint.save(r'{tmp_path}', 5, state_a)
 
-mesh_b = jax.make_mesh((2, 4), ('data', 'model'),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_b = make_mesh((2, 4), ('data', 'model'))
 sh_b = ShardCtx(mesh_b, TRAIN_RULES).tree(astate, slog)
 state_b, at = checkpoint.restore_latest(r'{tmp_path}', astate, sh_b)
 assert at == 5
@@ -139,12 +140,12 @@ def test_dryrun_cell_small_mesh():
     """The dry-run machinery itself on an 8-device (4,2) mesh."""
     out = run_sub(r"""
 import jax
+from repro.compat import make_mesh
 from repro import configs
 from repro.launch.specs import build_cell
 from repro.launch import hlo_cost
 
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ('data', 'model'))
 for shape_name in ['train_4k', 'decode_32k']:
     cfg = configs.get('olmo-1b', reduced=True)
     import dataclasses
@@ -166,9 +167,9 @@ def test_sharded_alignment_service():
     """The paper's N_K channels sharded over a real (fake-)device mesh."""
     out = run_sub(r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.serve import AlignRequest, AlignmentService
-mesh = jax.make_mesh((8,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('data',))
 svc = AlignmentService(max_len=64, block=8, mesh=mesh)
 rng = np.random.default_rng(0)
 for i in range(16):

@@ -1,0 +1,209 @@
+"""The unified alignment runtime: registry, plan cache, bucketing, and
+traceback-layout parity."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import align, kernels_zoo
+from repro.core import types as T
+from repro.core.traceback import _make_reader
+from repro.runtime import (available_engines, bucket_length, bucket_shape,
+                           get_engine, inverse_permutation, pack_by_bucket,
+                           pad_to_bucket, register_engine)
+from repro.runtime import plan as plan_mod
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_all_builtin_engines_resolve():
+    for name in ("reference", "wavefront", "banded", "pallas",
+                 "pallas_interpret"):
+        assert name in available_engines()
+        assert callable(get_engine(name))
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("systolic_fpga")
+
+
+def test_plug_in_engine(rng):
+    calls = []
+
+    def counting_engine(spec, params, query, ref, q_len=None, r_len=None):
+        calls.append(spec.name)
+        return get_engine("reference")(spec, params, query, ref, q_len, r_len)
+
+    register_engine("counting", counting_engine, overwrite=True)
+    spec, params = kernels_zoo.make("global_linear")
+    import jax.numpy as jnp
+    q = jnp.asarray(rng.integers(0, 4, 20).astype(np.uint8))
+    a = align(spec, params, q, q, engine_name="counting",
+              with_traceback=False)
+    b = align(spec, params, q, q, engine_name="reference",
+              with_traceback=False)
+    assert calls == ["global_linear"]
+    assert int(a.score) == int(b.score)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+def test_same_bucket_reuses_one_plan(rng):
+    """Two align calls with the same (kernel, engine, bucket) share one
+    CompiledPlan: the cache holds exactly one entry."""
+    import jax.numpy as jnp
+    spec, params = kernels_zoo.make("global_affine")
+    plan_mod.clear_plan_cache()
+    q1 = jnp.asarray(rng.integers(0, 4, 40).astype(np.uint8))
+    r1 = jnp.asarray(rng.integers(0, 4, 44).astype(np.uint8))
+    q2 = jnp.asarray(rng.integers(0, 4, 50).astype(np.uint8))
+    r2 = jnp.asarray(rng.integers(0, 4, 61).astype(np.uint8))
+    align(spec, params, q1, r1)            # lengths 40/44 -> bucket 64/64
+    info1 = plan_mod.plan_cache_info()
+    align(spec, params, q2, r2)            # lengths 50/61 -> same bucket
+    info2 = plan_mod.plan_cache_info()
+    assert info1["size"] == 1
+    assert info2["size"] == 1, info2["keys"]
+    assert info2["hits"] == info1["hits"] + 1
+    key = info2["keys"][0]
+    assert key.kernel == "global_affine"
+    assert key.bucket_shape == ((64,), (64,))
+
+
+def test_distinct_engines_get_distinct_plans(rng):
+    import jax.numpy as jnp
+    spec, params = kernels_zoo.make("global_linear")
+    plan_mod.clear_plan_cache()
+    q = jnp.asarray(rng.integers(0, 4, 20).astype(np.uint8))
+    s_wf = align(spec, params, q, q, engine_name="wavefront",
+                 with_traceback=False).score
+    s_ref = align(spec, params, q, q, engine_name="reference",
+                  with_traceback=False).score
+    assert plan_mod.plan_cache_info()["size"] == 2
+    assert int(s_wf) == int(s_ref)
+
+
+def test_tiling_reuses_plans_across_calls(rng):
+    from repro.core.tiling import tiled_align
+    spec, params = kernels_zoo.make("global_affine")
+    from repro.core import alphabets
+    ref = alphabets.random_dna(rng, 120)
+    read = alphabets.mutate(rng, ref, 0.1)
+    plan_mod.clear_plan_cache()
+    tiled_align(spec, params, read, ref, tile=64, overlap=16)
+    n1 = plan_mod.plan_cache_info()["size"]
+    tiled_align(spec, params, read[:100], ref[:110], tile=64, overlap=16)
+    n2 = plan_mod.plan_cache_info()["size"]
+    assert n1 == 2          # interior + final variants
+    assert n2 == 2          # second call compiled nothing new
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+def test_bucket_length_choices():
+    assert bucket_length(0) == 16
+    assert bucket_length(1) == 16
+    assert bucket_length(16) == 16
+    assert bucket_length(17) == 32
+    assert bucket_length(40) == 64
+    assert bucket_length(64) == 64
+    assert bucket_length(200, max_bucket=256) == 256
+    assert bucket_length(40, min_bucket=8, growth=4.0) == 128
+    with pytest.raises(ValueError):
+        bucket_length(300, max_bucket=256)
+    assert bucket_shape(10, 40) == (16, 64)
+
+
+def test_pad_to_bucket_roundtrip(rng):
+    x = rng.integers(0, 4, (37, 5)).astype(np.uint8)
+    p = pad_to_bucket(x, 64)
+    assert p.shape == (64, 5)
+    np.testing.assert_array_equal(p[:37], x)
+    assert not p[37:].any()
+    assert pad_to_bucket(x, 37) is x
+    with pytest.raises(ValueError):
+        pad_to_bucket(x, 16)
+
+
+@pytest.mark.parametrize("block", [1, 3, 8, None])
+def test_pack_by_bucket_inverse_restores_order(block, rng):
+    lengths = [(int(rng.integers(1, 200)), int(rng.integers(1, 200)))
+               for _ in range(23)]
+    batches, inv = pack_by_bucket(lengths, block=block)
+    order = [int(i) for b in batches for i in b.indices]
+    assert sorted(order) == list(range(len(lengths)))     # a permutation
+    for b in batches:
+        assert block is None or len(b.indices) <= block
+        for i in b.indices:
+            ql, rl = lengths[i]
+            assert ql <= b.bucket[0] and rl <= b.bucket[1]
+    packed = [lengths[i] for i in order]                  # packed order
+    restored = [packed[inv[i]] for i in range(len(lengths))]
+    assert restored == lengths
+    np.testing.assert_array_equal(inverse_permutation(np.asarray(order)),
+                                  inv)
+
+
+# ---------------------------------------------------------------------------
+# traceback-layout parity: the ('chunk', n_pe) reader must reproduce the
+# 'diag' and 'row' readers on identical pointer contents
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("Q,R,n_pe", [(8, 8, 4), (10, 7, 4),   # Q % n_pe != 0
+                                      (5, 12, 8), (13, 13, 8)])
+def test_tb_reader_layout_parity(Q, R, n_pe, rng):
+    row = np.zeros((Q + 1, R + 1), np.uint8)
+    row[1:, 1:] = rng.integers(0, 7, (Q, R)).astype(np.uint8)
+
+    diag = np.zeros((Q + R, Q + 1), np.uint8)
+    n_chunks = -(-Q // n_pe)
+    chunk = np.zeros((n_chunks, n_pe, n_pe + R - 1), np.uint8)
+    for i in range(1, Q + 1):
+        for j in range(1, R + 1):
+            diag[i + j - 1, i] = row[i, j]
+            c, lane = (i - 1) // n_pe, (i - 1) % n_pe
+            chunk[c, lane, lane + j - 1] = row[i, j]
+
+    import jax.numpy as jnp
+    readers = {
+        "row": _make_reader(jnp.asarray(row), "row"),
+        "diag": _make_reader(jnp.asarray(diag), "diag"),
+        "chunk": _make_reader(jnp.asarray(chunk), ("chunk", n_pe)),
+    }
+    for i in range(1, Q + 1):
+        for j in range(1, R + 1):
+            got = {k: int(f(i, j)) for k, f in readers.items()}
+            assert got["chunk"] == got["row"] == got["diag"], (i, j, got)
+
+
+# ---------------------------------------------------------------------------
+# service: per-(kernel, bucket) padding instead of one global max_len
+# ---------------------------------------------------------------------------
+def test_service_pads_to_bucket_not_max_len(rng):
+    from repro.serve import AlignRequest, AlignmentService
+    svc = AlignmentService(max_len=256, block=4)
+    short = [(rng.integers(0, 4, 12).astype(np.uint8),
+              rng.integers(0, 4, 14).astype(np.uint8)) for _ in range(4)]
+    long = [(rng.integers(0, 4, 180).astype(np.uint8),
+             rng.integers(0, 4, 200).astype(np.uint8)) for _ in range(2)]
+    reqs = [AlignRequest(rid=i, kernel="global_affine", query=q, ref=r)
+            for i, (q, r) in enumerate(short + long)]
+    for r in reqs:
+        svc.submit(r)
+    # queues are keyed per (kernel, bucket), not per kernel
+    assert set(svc.queues) == {("global_affine", (16, 16)),
+                               ("global_affine", (256, 256))}
+    assert svc.drain() == 6
+    buckets = {d["bucket"] for d in svc.dispatches}
+    assert (16, 16) in buckets           # short batch padded to its bucket
+    assert all(b <= (256, 256) for b in buckets)
+    # results match the direct (unbatched, unpadded) path
+    import jax.numpy as jnp
+    spec, params = kernels_zoo.make("global_affine")
+    for req in reqs:
+        direct = align(spec, params, jnp.asarray(req.query),
+                       jnp.asarray(req.ref), with_traceback=False)
+        assert req.result["score"] == pytest.approx(float(direct.score))
