@@ -11,7 +11,8 @@ import traceback
 
 from . import (bench_kernels_table2, bench_scaling_fig3,
                bench_vs_handcoded_fig45, bench_vs_software_fig6,
-               bench_vs_naive_hls, bench_tiling, bench_bucketing)
+               bench_vs_naive_hls, bench_tiling, bench_bucketing,
+               bench_mapping)
 
 SUITES = [
     ("Table 2 (15 kernels)", bench_kernels_table2),
@@ -21,6 +22,7 @@ SUITES = [
     ("S7.5 (vs naive-HLS schedule)", bench_vs_naive_hls),
     ("Tiling (claim 5)", bench_tiling),
     ("Bucketed batching (runtime)", bench_bucketing),
+    ("Read mapping (seed-and-extend)", bench_mapping),
 ]
 
 

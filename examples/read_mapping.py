@@ -1,0 +1,56 @@
+"""Read mapping quickstart: simulate reads, map them, print SAM.
+
+The mapping subsystem turns the kernel zoo into a pipeline: minimizer
+index -> batched seeding -> sparse anchor chaining (a 1-D DP kernel) ->
+banded semiglobal extension through the shared CompiledPlan cache -> SAM
+records.  This example simulates error-carrying reads from a random
+reference (both strands), maps them back, and checks that >= 95% land
+within 5 bp of their true origin with CIGARs that consume the full read.
+
+Run:  PYTHONPATH=src python examples/read_mapping.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import alphabets
+from repro.data.synthetic import sample_reads
+from repro.mapping import ReadMapper, cigar_spans
+from repro.runtime import plan as plan_mod
+
+
+def main():
+    rng = np.random.default_rng(0)
+    ref = alphabets.random_dna(rng, 20000)
+    reads = sample_reads(ref, n=60, length=200, error_rate=0.08, seed=1)
+
+    mapper = ReadMapper(ref, rname="synthetic_20k")
+    t0 = time.perf_counter()
+    records = mapper.map_reads(reads.reads, reads.lens)
+    elapsed = time.perf_counter() - t0
+
+    hits = cigars_ok = 0
+    for i, rec in enumerate(records):
+        if rec.is_mapped and abs((rec.pos - 1) - int(reads.pos[i])) <= 5:
+            hits += 1
+            if cigar_spans(rec.cigar)[0] == int(reads.lens[i]):
+                cigars_ok += 1
+    acc = hits / len(records)
+
+    print("# first records:")
+    for rec in records[:5]:
+        line = rec.to_line()
+        print(line[:100] + ("..." if len(line) > 100 else ""))
+    info = plan_mod.plan_cache_info()
+    print(f"\nmapped {hits}/{len(records)} within +-5 bp "
+          f"(accuracy {acc:.2f}), {cigars_ok} full-span CIGARs, "
+          f"{elapsed:.2f}s ({len(records) / elapsed:.1f} reads/s)")
+    print(f"plan cache: {info['size']} compiled shapes, "
+          f"{info['hits']} hits")
+    assert acc >= 0.95, f"mapping accuracy {acc:.2f} below 0.95"
+    assert cigars_ok == hits, "some CIGARs do not consume the full read"
+    print("read mapping OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,12 @@ def decode_protein(codes) -> str:
     return "".join(PROTEIN[int(c)] for c in codes)
 
 
+def revcomp_dna(codes) -> np.ndarray:
+    """Reverse complement of 2-bit DNA codes (A<->T, C<->G; N fixed)."""
+    out = np.asarray(codes, np.uint8)[::-1]
+    return np.where(out < 4, 3 - out, out).astype(np.uint8)
+
+
 def random_dna(rng: np.random.Generator, n: int) -> np.ndarray:
     return rng.integers(0, 4, size=(n,)).astype(np.uint8)
 

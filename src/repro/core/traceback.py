@@ -95,9 +95,16 @@ def run(spec: T.DPKernelSpec, result: T.DPResult, max_len: int) -> T.Alignment:
 # ---------------------------------------------------------------------------
 # Host-side utilities (not jitted)
 # ---------------------------------------------------------------------------
-def moves_to_cigar(moves, n_moves) -> str:
-    """end->start move array -> CIGAR string (start->end order)."""
-    ops = {T.MOVE_DIAG: "M", T.MOVE_UP: "D", T.MOVE_LEFT: "I"}
+def moves_to_cigar(moves, n_moves, ops=None) -> str:
+    """end->start move array -> CIGAR string (start->end order).
+
+    ``ops`` overrides the move -> op-letter map.  The default follows the
+    repo convention (MOVE_UP = query-consuming = 'D'); SAM emission with
+    the read on the query axis passes ``{MOVE_DIAG: 'M', MOVE_UP: 'I',
+    MOVE_LEFT: 'D'}`` instead (see ``repro.mapping.sam``).
+    """
+    if ops is None:
+        ops = {T.MOVE_DIAG: "M", T.MOVE_UP: "D", T.MOVE_LEFT: "I"}
     seq = [ops[int(m)] for m in list(moves[: int(n_moves)])[::-1]]
     if not seq:
         return ""

@@ -1,0 +1,99 @@
+"""Anchor chaining (mapping stage 3): a sparse 1-D DP kernel.
+
+Unlike the 2-D matrix kernels in ``core.kernels_zoo``, chaining is a DP
+over the *anchor list*: anchors sorted by (r_pos, q_pos) get
+
+    f[i] = k + max(0, max_{j < i} f[j] + gain(j, i))
+
+with the minimap2-style gain ``min(dq, dr, k) - gap_scale * |dr - dq|``
+for co-linear predecessors (dq, dr > 0, dr bounded, bounded diagonal
+skew).  Implemented as a ``lax.fori_loop`` over anchors with O(A) vector
+work per step — jit-able, vmap-able over reads — plus its own parent-
+pointer traceback (a ``lax.while_loop`` walk) that reports the chain's
+span and diagonal range, which downstream becomes the extension window
+and band.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-1e9)
+
+
+class ChainResult(NamedTuple):
+    """Best chain of one read (all jnp scalars; NamedTuple = free pytree).
+
+    Coordinates are k-mer *start* positions of the first/last chained
+    anchor; ``d_min``/``d_max`` bound the chain's diagonals r_pos - q_pos.
+    ``score2`` is the best chain score outside the primary chain's
+    reference neighborhood (feeds mapq).
+    """
+    score: jnp.ndarray
+    score2: jnp.ndarray
+    n_anchors: jnp.ndarray
+    q_start: jnp.ndarray
+    q_end: jnp.ndarray
+    r_start: jnp.ndarray
+    r_end: jnp.ndarray
+    d_min: jnp.ndarray
+    d_max: jnp.ndarray
+
+
+def chain_anchors(q_pos, r_pos, valid, k: int, read_len, *,
+          max_dist: int = 512, max_skew: int = 64,
+          gap_scale: float = 0.5) -> ChainResult:
+    """Chain anchors already sorted by (r_pos, q_pos) (see seed.top_anchors)."""
+    A = q_pos.shape[0]
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    r_pos = jnp.asarray(r_pos, jnp.int32)
+    read_len = jnp.asarray(read_len, jnp.int32)
+    idx = jnp.arange(A)
+    kf = jnp.float32(k)
+
+    def step(i, fp):
+        f, p = fp
+        dq = q_pos[i] - q_pos
+        dr = r_pos[i] - r_pos
+        ok = (valid & valid[i] & (idx < i) & (dq > 0) & (dr > 0)
+              & (dr <= max_dist) & (jnp.abs(dr - dq) <= max_skew))
+        gain = (jnp.minimum(jnp.minimum(dq, dr), k).astype(jnp.float32)
+                - gap_scale * jnp.abs(dr - dq).astype(jnp.float32))
+        cand = jnp.where(ok, f + gain, NEG)
+        bj = jnp.argmax(cand)
+        bv = cand[bj]
+        fi = jnp.where(valid[i], kf + jnp.maximum(bv, 0.0), NEG)
+        pi = jnp.where(bv > 0, bj.astype(jnp.int32), jnp.int32(-1))
+        return f.at[i].set(fi), p.at[i].set(pi)
+
+    f0 = jnp.full((A,), NEG, jnp.float32)
+    p0 = jnp.full((A,), -1, jnp.int32)
+    f, p = jax.lax.fori_loop(0, A, step, (f0, p0))
+
+    e = jnp.argmax(f)
+    d = r_pos - q_pos
+
+    # parent-pointer traceback: walk to the chain start collecting span
+    def cond(c):
+        cur, n, *_ = c
+        return (p[cur] >= 0) & (n < A)
+
+    def body(c):
+        cur, n, qs, rs, dmin, dmax = c
+        nxt = p[cur]
+        return (nxt, n + 1, jnp.minimum(qs, q_pos[nxt]),
+                jnp.minimum(rs, r_pos[nxt]),
+                jnp.minimum(dmin, d[nxt]), jnp.maximum(dmax, d[nxt]))
+
+    cur, n, qs, rs, dmin, dmax = jax.lax.while_loop(
+        cond, body, (e, jnp.int32(1), q_pos[e], r_pos[e], d[e], d[e]))
+
+    # runner-up: best chain ending outside the primary's ref neighborhood
+    away = valid & ((r_pos < rs - read_len) | (r_pos > r_pos[e] + read_len))
+    score2 = jnp.max(jnp.where(away, f, NEG))
+
+    return ChainResult(score=f[e], score2=jnp.maximum(score2, 0.0),
+                       n_anchors=n, q_start=qs, q_end=q_pos[e],
+                       r_start=rs, r_end=r_pos[e], d_min=dmin, d_max=dmax)

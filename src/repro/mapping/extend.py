@@ -1,0 +1,101 @@
+"""Banded extension (mapping stage 4): chains -> base-level alignments.
+
+Each surviving chain defines an extension job: a reference *window*
+(chain span plus ``margin`` slack on both sides) and a *band* wide enough
+to hold the chain's diagonal range plus indel drift.  The alignment
+itself is the zoo's semiglobal kernel (read end-to-end against a
+reference substring — the "fit" alignment a mapper needs) with a
+per-chain band, dispatched through ``runtime.run_pairs`` so mixed window
+sizes land as length-bucketed batches on the shared CompiledPlan cache.
+
+Bands quantize to power-of-two buckets (``bucketing.bucket_length``) so
+the number of distinct kernel specs — and therefore compiled plans —
+stays logarithmic in the observed diagonal spreads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.kernels_zoo import dna_linear
+from repro.runtime import bucketing, dispatch
+
+from . import chain as chain_mod
+from . import sam as sam_mod
+
+# one scoring-param set for every extension band (the mapq/score gates in
+# pipeline.py read the match bonus from here — single source of truth)
+EXTEND_PARAMS = dna_linear.default_params()
+
+# band -> (spec, params); reusing one spec object per band keeps the plan
+# cache keyed correctly (distinct spec constructions never share plans)
+_SPECS: dict[int, tuple] = {}
+
+
+def extension_spec(band: int):
+    if band not in _SPECS:
+        _SPECS[band] = (dna_linear.semiglobal(band=band), EXTEND_PARAMS)
+    return _SPECS[band]
+
+
+@dataclasses.dataclass
+class ExtendJob:
+    """One read (strand-corrected, trimmed) + its reference window."""
+    read: np.ndarray
+    win_start: int
+    window: np.ndarray
+    band: int
+
+
+def make_job(ref: np.ndarray, read: np.ndarray, ch: chain_mod.ChainResult,
+             k: int, *, margin: int = 32,
+             min_band: int = 32) -> Optional[ExtendJob]:
+    """Extension window/band for one chained read (host-side ints)."""
+    ref_len = len(ref)
+    read_len = len(read)
+    q_start, q_end = int(ch.q_start), int(ch.q_end)
+    r_start, r_end = int(ch.r_start), int(ch.r_end)
+    d_span = int(ch.d_max) - int(ch.d_min)
+    start = max(r_start - q_start - margin, 0)
+    end = min(r_end + (read_len - q_end) + margin, ref_len)
+    if end - start < read_len // 2:
+        return None
+    # |i - j| along the true path <= window offset + chain skew + drift
+    need = (r_start - q_start - start) + d_span + margin
+    band = bucketing.bucket_length(need, min_bucket=min_band)
+    return ExtendJob(read=read, win_start=start, window=ref[start:end],
+                     band=band)
+
+
+def extend_jobs(jobs: list, *, engine_name: str = "wavefront",
+                block: int = 8) -> list:
+    """Run all extension jobs; returns per-job dicts in input order.
+
+    Jobs group by band (one semiglobal spec each), and within a band by
+    length bucket via the runtime's packed dispatch — this is where a
+    mixed-length read stream puts real multi-bucket load on the plan
+    cache.
+    """
+    results: list = [None] * len(jobs)
+    by_band: dict[int, list[int]] = {}
+    for i, job in enumerate(jobs):
+        by_band.setdefault(job.band, []).append(i)
+    for band, idxs in sorted(by_band.items()):
+        spec, params = extension_spec(band)
+        pairs = [(jobs[i].read, jobs[i].window) for i in idxs]
+        outs = dispatch.run_pairs(spec, params, pairs,
+                                  engine_name=engine_name, block=block,
+                                  with_traceback=True)
+        for i, aln in zip(idxs, outs):
+            job = jobs[i]
+            cigar = sam_mod.moves_to_sam_cigar(aln.moves, aln.n_moves)
+            results[i] = {
+                "score": float(aln.score),
+                # path starts at cell (0, j0): read base 1 aligns after
+                # window offset j0 -> 0-based genome position
+                "pos": job.win_start + int(aln.start_j),
+                "cigar": cigar,
+            }
+    return results

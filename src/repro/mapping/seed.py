@@ -1,0 +1,63 @@
+"""Seeding (mapping stage 2): query minimizers -> reference anchors.
+
+An *anchor* is a (q_pos, r_pos) pair asserting that the k-mer at read
+position q_pos also occurs at reference position r_pos.  Extraction reuses
+the index's minimizer sketch on the (padded) read, looks every minimizer
+up in the sorted bucket table, and emits up to ``max_hits`` occurrences
+per seed as fixed-shape masked arrays — jit-able and vmap-able over a
+batch of reads.  Seeds with more than ``max_occ`` occurrences are dropped
+(repeat masking, minimap2's high-frequency filter).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import index as index_mod
+
+# int32 sort key = r_pos * QPOS_STRIDE + q_pos: keeps anchors grouped by
+# reference position with deterministic q_pos tie-breaks.  Bounds the
+# indexable reference to 2^31 / QPOS_STRIDE bases (~2 Mb), plenty for the
+# synthetic workloads; a 64-bit key is the lift for real genomes.
+QPOS_STRIDE = 1024
+_INVALID = jnp.int32(2**31 - 1)
+
+
+def seed_anchors(index: index_mod.MinimizerIndex, read, read_len,
+                 max_hits: int = 8, max_occ: int = 64):
+    """Anchors of one (padded) read against the index.
+
+    Returns ``(q_pos, r_pos, valid)`` flat arrays of static length
+    n_windows * max_hits; ``valid`` masks real anchors (minimizer inside
+    the effective read, occurrence exists, seed not repeat-masked).
+    """
+    pos, h = index_mod.minimizers(read, index.k, index.w)     # (n_win,)
+    n_win = pos.shape[0]
+    read_len = jnp.asarray(read_len, jnp.int32)
+    # live minimizers only: k-mer fully inside the effective read
+    ok = pos <= read_len - index.k
+    # adjacent windows repeat minimizers; keep first occurrence
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), pos[:-1]])
+    ok = ok & (pos != prev)
+    lo, hi = index_mod.lookup_range(index, h)
+    cnt = hi - lo
+    ok = ok & (cnt > 0) & (cnt <= max_occ)
+    t = jnp.arange(max_hits)
+    hit_ok = ok[:, None] & (t[None, :] < cnt[:, None])        # (n_win, H)
+    hit_idx = jnp.clip(lo[:, None] + t[None, :], 0,
+                       index.positions.shape[0] - 1)
+    r_pos = jnp.where(hit_ok, index.positions[hit_idx], 0)
+    q_pos = jnp.broadcast_to(pos[:, None], (n_win, max_hits))
+    return (q_pos.reshape(-1).astype(jnp.int32),
+            r_pos.reshape(-1).astype(jnp.int32),
+            hit_ok.reshape(-1))
+
+
+def top_anchors(q_pos, r_pos, valid, n_anchors: int):
+    """Sort anchors by (r_pos, q_pos), invalid last, and keep the first
+    ``n_anchors`` — the fixed-size input the chaining DP expects."""
+    key = jnp.where(valid,
+                    r_pos * QPOS_STRIDE + jnp.minimum(q_pos, QPOS_STRIDE - 1),
+                    _INVALID)
+    order = jnp.argsort(key)[:n_anchors]
+    return (q_pos[order], r_pos[order],
+            valid[order] & (key[order] != _INVALID))

@@ -13,6 +13,7 @@ from .plan import (CompiledPlan, align_impl, clear_plan_cache, get_plan,
                    plan_cache_info)
 from .bucketing import (Bucket, bucket_length, bucket_shape,
                         inverse_permutation, pack_by_bucket, pad_to_bucket)
+from .dispatch import run_pairs
 
 __all__ = [
     "Engine", "available_engines", "get_engine", "register_engine",
@@ -20,4 +21,5 @@ __all__ = [
     "plan_cache_info",
     "Bucket", "bucket_length", "bucket_shape", "inverse_permutation",
     "pack_by_bucket", "pad_to_bucket",
+    "run_pairs",
 ]

@@ -1,2 +1,3 @@
 from .engine import Request, ServeSession
 from .alignment_service import AlignRequest, AlignmentService
+from .mapping_service import MapRequest, ReadMappingService

@@ -51,9 +51,11 @@ class AlignmentService:
     def __init__(self, max_len: int = 256, block: int = 8, mesh=None,
                  engine_name: str = "wavefront", with_traceback: bool = True,
                  redispatch_after: float = 60.0,
-                 min_bucket: int = bucketing.DEFAULT_MIN_BUCKET):
+                 min_bucket: int = bucketing.DEFAULT_MIN_BUCKET,
+                 coalesce: bool = True):
         self.max_len, self.block = max_len, block
         self.min_bucket = min(min_bucket, max_len)
+        self.coalesce = coalesce
         self.mesh = mesh
         self.engine_name = engine_name
         self.with_traceback = with_traceback
@@ -106,13 +108,13 @@ class AlignmentService:
         return qs, rs, ql, rl
 
     def _dispatch(self, kernel: str, bucket: Tuple[int, int],
-                  reqs: List[AlignRequest]):
+                  reqs: List[AlignRequest], coalesced: bool = False):
         spec, params, sharded_fn = self._channel(kernel)
         qs, rs, ql, rl = self._pad_batch(
             reqs, bucket, spec.char_shape,
             np.dtype(jnp.dtype(spec.char_dtype).name))
         self.dispatches.append({"kernel": kernel, "bucket": bucket,
-                                "n": len(reqs)})
+                                "n": len(reqs), "coalesced": coalesced})
         if sharded_fn is not None:
             out = sharded_fn(params, jnp.asarray(qs), jnp.asarray(rs),
                              jnp.asarray(ql), jnp.asarray(rl))
@@ -136,18 +138,60 @@ class AlignmentService:
             r.result = res
         return len(reqs)
 
+    def _coalesce_batch(self, kernel: str, bucket: Tuple[int, int],
+                        reqs: List[AlignRequest]) -> Tuple[int, int]:
+        """Top a partial batch up with requests from dominating buckets.
+
+        A bucket ``b2`` dominates when both sides are >= ``bucket`` — its
+        requests fit after padding to ``b2``, so the combined batch
+        dispatches at the elementwise-max bucket.  Closest (smallest
+        dominating) buckets are drained first to keep padding waste low.
+        """
+        out_bucket = bucket
+        donors = sorted(
+            (b2 for (k2, b2) in self.queues
+             if k2 == kernel and b2 != bucket
+             and b2[0] >= bucket[0] and b2[1] >= bucket[1]
+             and self.queues[(k2, b2)]),
+            key=lambda b2: b2[0] * b2[1])
+        for b2 in donors:
+            queue = self.queues[(kernel, b2)]
+            while queue and len(reqs) < self.block:
+                reqs.append(queue.pop(0))
+                out_bucket = (max(out_bucket[0], b2[0]),
+                              max(out_bucket[1], b2[1]))
+            if len(reqs) >= self.block:
+                break
+        return out_bucket
+
     def drain(self, worker: str = "w0") -> int:
-        """Process all queued requests; returns #completed."""
+        """Process all queued requests; returns #completed.
+
+        Buckets drain smallest-first; with ``coalesce`` a trailing partial
+        batch is topped up from the next-larger bucket's queue (ROADMAP's
+        cross-bucket batch coalescing) instead of dispatching half-empty.
+        """
         done = 0
-        for (kernel, bucket), queue in list(self.queues.items()):
-            while queue:
-                reqs = [queue.pop(0) for _ in range(min(self.block,
-                                                        len(queue)))]
-                self.monitor.beat(worker)
-                self.inflight[worker] = (kernel, reqs)
-                done += self._dispatch(kernel, bucket, reqs)
-                del self.inflight[worker]
-                self.monitor.beat(worker)
+        while True:
+            pending = [(k, b) for (k, b) in sorted(
+                self.queues, key=lambda kb: (kb[0], kb[1][0] * kb[1][1]))
+                if self.queues[(k, b)]]
+            if not pending:
+                break
+            kernel, bucket = pending[0]
+            queue = self.queues[(kernel, bucket)]
+            reqs = [queue.pop(0) for _ in range(min(self.block, len(queue)))]
+            coalesced = False
+            if self.coalesce and not queue and len(reqs) < self.block:
+                out_bucket = self._coalesce_batch(kernel, bucket, reqs)
+                coalesced = out_bucket != bucket
+                bucket = out_bucket
+            self.monitor.beat(worker)
+            self.inflight[worker] = (kernel, reqs)
+            done += self._dispatch(kernel, bucket, reqs,
+                                   coalesced=coalesced)
+            del self.inflight[worker]
+            self.monitor.beat(worker)
         return done
 
     def redispatch_dead(self, now: Optional[float] = None) -> int:

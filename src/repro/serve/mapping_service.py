@@ -1,0 +1,60 @@
+"""Read-mapping as a service: the ``map_reads`` channel next to align.
+
+Where ``AlignmentService`` serves pre-paired (query, ref) requests, this
+channel serves *reads only*: a ``ReadMapper`` owns the reference index
+and every drained block runs the full seed-chain-extend pipeline, whose
+extension stage lands on the same shared CompiledPlan cache as the align
+channels.  Results attach to the submitted request objects (same contract
+as ``AlignRequest``), so callers keep their own ordering.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.mapping import ReadMapper
+
+
+@dataclasses.dataclass
+class MapRequest:
+    rid: int
+    read: np.ndarray                 # uint8 DNA codes, as sequenced
+    result: Optional[dict] = None    # {flag,pos,mapq,cigar,score,...}
+
+
+class ReadMappingService:
+    """Single-process reference implementation of the map_reads channel."""
+
+    def __init__(self, ref, block: int = 16, mapper: Optional[ReadMapper] = None,
+                 **mapper_kw):
+        self.mapper = mapper if mapper is not None else ReadMapper(
+            ref, **mapper_kw)
+        self.block = block
+        self.queue: List[MapRequest] = []
+        self.dispatches = collections.deque(maxlen=4096)
+
+    def submit(self, req: MapRequest):
+        self.queue.append(req)
+
+    def drain(self) -> int:
+        """Map all queued reads in ``block``-sized batches; returns #done."""
+        done = 0
+        while self.queue:
+            reqs = [self.queue.pop(0)
+                    for _ in range(min(self.block, len(self.queue)))]
+            records = self.mapper.map_reads(
+                [r.read for r in reqs],
+                names=[f"r{r.rid}" for r in reqs])
+            self.dispatches.append({"n": len(reqs)})
+            for req, rec in zip(reqs, records):
+                req.result = {
+                    "flag": rec.flag, "pos": rec.pos, "mapq": rec.mapq,
+                    "cigar": rec.cigar, "score": rec.score,
+                    "chain_score": rec.chain_score,
+                    "mapped": rec.is_mapped, "sam": rec.to_line(),
+                }
+            done += len(reqs)
+        return done

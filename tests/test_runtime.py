@@ -207,3 +207,48 @@ def test_service_pads_to_bucket_not_max_len(rng):
         direct = align(spec, params, jnp.asarray(req.query),
                        jnp.asarray(req.ref), with_traceback=False)
         assert req.result["score"] == pytest.approx(float(direct.score))
+
+
+def _mixed_bucket_requests(rng):
+    """2 short (bucket 16), 2 medium (64), 2 large (256) requests."""
+    from repro.serve import AlignRequest
+    sizes = [12, 14, 40, 50, 180, 200]
+    return [AlignRequest(rid=i, kernel="global_affine",
+                         query=rng.integers(0, 4, s).astype(np.uint8),
+                         ref=rng.integers(0, 4, s).astype(np.uint8))
+            for i, s in enumerate(sizes)]
+
+
+def test_service_coalesces_partial_batches_across_buckets(rng):
+    """A trailing partial batch tops up from the next-larger bucket; every
+    request still gets its own correct result (order restoration)."""
+    from repro.serve import AlignRequest, AlignmentService  # noqa: F811
+    import jax.numpy as jnp
+    svc = AlignmentService(max_len=256, block=4)
+    reqs = _mixed_bucket_requests(rng)
+    for r in reqs:
+        svc.submit(r)
+    assert svc.drain() == 6
+    dispatches = list(svc.dispatches)
+    # shorts coalesce with mediums at (64, 64); larges stay partial alone
+    assert len(dispatches) == 2
+    assert dispatches[0]["bucket"] == (64, 64)
+    assert dispatches[0]["n"] == 4 and dispatches[0]["coalesced"]
+    assert dispatches[1]["bucket"] == (256, 256)
+    assert not dispatches[1]["coalesced"]
+    # per-request results survive the reshuffle and match the direct path
+    spec, params = kernels_zoo.make("global_affine")
+    for req in reqs:
+        direct = align(spec, params, jnp.asarray(req.query),
+                       jnp.asarray(req.ref), with_traceback=False)
+        assert req.result["score"] == pytest.approx(float(direct.score))
+
+
+def test_service_coalescing_off_keeps_per_bucket_batches(rng):
+    from repro.serve import AlignRequest, AlignmentService  # noqa: F811
+    svc = AlignmentService(max_len=256, block=4, coalesce=False)
+    for r in _mixed_bucket_requests(rng):
+        svc.submit(r)
+    assert svc.drain() == 6
+    assert len(svc.dispatches) == 3
+    assert all(not d["coalesced"] for d in svc.dispatches)

@@ -1,0 +1,68 @@
+"""moves_to_cigar coverage beyond the all-match case: I/D run-length
+encoding, leading/trailing gaps, empty alignments, and op-map overrides."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import types as T
+from repro.core.traceback import moves_to_cigar
+
+_CODE = {"M": T.MOVE_DIAG, "D": T.MOVE_UP, "I": T.MOVE_LEFT}
+
+
+def enc(forward_ops: str):
+    """Forward op string -> (end->start move array with slack, n_moves)."""
+    mv = [_CODE[o] for o in forward_ops][::-1]
+    arr = np.zeros((len(mv) + 4,), np.uint8)   # trailing junk must be ignored
+    arr[: len(mv)] = mv
+    arr[len(mv):] = _CODE["M"]
+    return arr, len(mv)
+
+
+def test_all_match():
+    assert moves_to_cigar(*enc("MMMM")) == "4M"
+
+
+def test_insertion_and_deletion_runs():
+    assert moves_to_cigar(*enc("MMIIIMDD")) == "2M3I1M2D"
+    assert moves_to_cigar(*enc("MDMDMD")) == "1M1D1M1D1M1D"
+
+
+def test_leading_and_trailing_gaps():
+    assert moves_to_cigar(*enc("DDMMI")) == "2D2M1I"
+    assert moves_to_cigar(*enc("IMMMDD")) == "1I3M2D"
+
+
+def test_empty_alignment():
+    assert moves_to_cigar(np.zeros((6,), np.uint8), 0) == ""
+
+
+def test_n_moves_truncates_trailing_junk():
+    arr, n = enc("MMDD")
+    assert moves_to_cigar(arr, n) == "2M2D"
+    assert moves_to_cigar(arr, 2) != moves_to_cigar(arr, n)
+
+
+def test_ops_override_swaps_sam_convention():
+    sam_ops = {T.MOVE_DIAG: "M", T.MOVE_UP: "I", T.MOVE_LEFT: "D"}
+    arr, n = enc("MMIIIMDD")       # default: I = MOVE_LEFT, D = MOVE_UP
+    assert moves_to_cigar(arr, n, ops=sam_ops) == "2M3D1M2I"
+
+
+def test_real_alignment_cigar_consumes_both_sequences(rng):
+    """A global alignment's CIGAR must consume exactly q_len on the query
+    axis (M+D under the repo convention) and r_len on the reference axis
+    (M+I)."""
+    from repro.core import align, kernels_zoo
+    import jax.numpy as jnp
+    spec, params = kernels_zoo.make("global_linear")
+    q = jnp.asarray(rng.integers(0, 4, 21).astype(np.uint8))
+    r = jnp.asarray(rng.integers(0, 4, 33).astype(np.uint8))
+    a = align(spec, params, q, r)
+    cigar = moves_to_cigar(np.asarray(a.moves), int(a.n_moves))
+    import re
+    q_span = sum(int(c) for c, o in re.findall(r"(\d+)([MDI])", cigar)
+                 if o in "MD")
+    r_span = sum(int(c) for c, o in re.findall(r"(\d+)([MDI])", cigar)
+                 if o in "MI")
+    assert (q_span, r_span) == (21, 33)
