@@ -1,0 +1,102 @@
+"""Sync vs pipelined serving dispatch (the §5.3 double-buffering win).
+
+A mixed-length 256-request stream (short motif queries alongside whole
+reads, the realistic serving mix) drains through ``AlignmentService`` two
+ways:
+
+* ``sync``      — ``pipeline_depth=1``: launch a batch, block on its
+  results, pad the next one while the device idles (the old drain);
+* ``pipelined`` — ``pipeline_depth=3``: the dispatcher loop pads and
+  launches ahead while earlier batches compute on device (JAX async
+  dispatch), harvesting results behind the launch front.  Depth 3 keeps
+  one batch *queued* behind the one executing, so the device never
+  starves during the host's pad-and-launch gap.
+
+Results must be bit-identical between the two policies — the pipeline
+only reorders *host* work, never device math.  Emits per-request wall
+time for both plus the speedup.
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from repro.serve import AlignRequest, AlignmentService
+
+from .common import emit
+
+KERNEL = "global_affine"
+
+
+def _stream(rng, n, lo, hi):
+    """Mixed-length request stream, skewed short (most reads are short)."""
+    reqs = []
+    for i in range(n):
+        lq = min(hi, lo + int(rng.exponential(scale=(hi - lo) / 3.0)))
+        lr = min(hi, lo + int(rng.exponential(scale=(hi - lo) / 3.0)))
+        reqs.append(AlignRequest(
+            rid=i, kernel=KERNEL,
+            query=rng.integers(0, 4, lq).astype(np.uint8),
+            ref=rng.integers(0, 4, lr).astype(np.uint8)))
+    return reqs
+
+
+def _clone(reqs):
+    return [AlignRequest(rid=r.rid, kernel=r.kernel, query=r.query,
+                         ref=r.ref) for r in reqs]
+
+
+def _drain_stream(svc, base):
+    """Drain a cloned stream through a warm service; returns (s, results)."""
+    reqs = _clone(base)
+    t0 = time.perf_counter()
+    svc.submit_all(reqs)
+    svc.drain()
+    dt = time.perf_counter() - t0
+    return dt, [r.result for r in reqs]
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    n = 64 if quick else 256
+    # short-read serving mix (24..128 bases): the regime where host-side
+    # pad/convert work is a real fraction of each batch and overlap pays;
+    # 256-cell buckets are compute-bound and gain little on 2 host cores
+    lo, hi = 24, 128
+    block = 8
+    base = _stream(rng, n, lo, hi)
+
+    # long-lived services (the serving reality); the first pass through
+    # each compiles its bucket plans, then alternating measured passes.
+    # Best-of-N with gc fenced off: scheduler/GC interference only ever
+    # *adds* wall time, so the minimum is the faithful per-policy cost
+    # (same estimator timeit uses).
+    sync_svc = AlignmentService(max_len=hi, block=block, pipeline_depth=1)
+    pipe_svc = AlignmentService(max_len=hi, block=block, pipeline_depth=3)
+    for svc in (sync_svc, pipe_svc):
+        _drain_stream(svc, base)
+    ts, tp = [], []
+    for _ in range(3 if quick else 7):
+        gc.collect()
+        t, res_sync = _drain_stream(sync_svc, base)
+        ts.append(t)
+        gc.collect()
+        t, res_pipe = _drain_stream(pipe_svc, base)
+        tp.append(t)
+    t_sync = float(min(ts))
+    t_pipe = float(min(tp))
+
+    identical = res_sync == res_pipe
+    if not identical:
+        raise AssertionError(
+            "pipelined drain results diverge from the synchronous path")
+    emit("serving/sync_drain", t_sync / n, f"stream_s={t_sync:.3f}")
+    emit("serving/pipelined_drain", t_pipe / n,
+         f"stream_s={t_pipe:.3f} speedup={t_sync / t_pipe:.2f}x "
+         f"identical={identical}")
+
+
+if __name__ == "__main__":
+    run()

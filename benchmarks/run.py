@@ -12,7 +12,7 @@ import traceback
 from . import (bench_kernels_table2, bench_scaling_fig3,
                bench_vs_handcoded_fig45, bench_vs_software_fig6,
                bench_vs_naive_hls, bench_tiling, bench_bucketing,
-               bench_mapping)
+               bench_mapping, bench_serving)
 
 SUITES = [
     ("Table 2 (15 kernels)", bench_kernels_table2),
@@ -23,6 +23,7 @@ SUITES = [
     ("Tiling (claim 5)", bench_tiling),
     ("Bucketed batching (runtime)", bench_bucketing),
     ("Read mapping (seed-and-extend)", bench_mapping),
+    ("Serving (sync vs pipelined drain)", bench_serving),
 ]
 
 

@@ -9,7 +9,8 @@ Run:  PYTHONPATH=src python examples/alignment_service.py
 import numpy as np
 
 from repro.core import alphabets
-from repro.serve import AlignRequest, AlignmentService
+from repro.serve import (AlignFuture, AlignRequest, AlignmentService,
+                         InflightBatch)
 
 
 def main():
@@ -40,15 +41,20 @@ def main():
         print(f"channel {kernel!r}: traceback="
               f"{'yes' if spec.traceback else 'no'}")
 
-    # a worker dies mid-batch -> its work is re-queued by deadline
-    svc.monitor.beat("w9", now=0.0)
-    svc.inflight["w9"] = ("global_affine", [AlignRequest(
-        rid=99, kernel="global_affine",
-        query=alphabets.random_dna(rng, 50),
-        ref=alphabets.random_dna(rng, 50))])
-    requeued = svc.redispatch_dead(now=1e9)
+    # a worker dies mid-batch -> its work is re-queued by deadline; the
+    # requeued copy gets a new generation, so the dead worker's late
+    # result (if it ever lands) is discarded rather than double-completing
+    late = AlignRequest(rid=99, kernel="global_affine",
+                        query=alphabets.random_dna(rng, 50),
+                        ref=alphabets.random_dna(rng, 50))
+    fut = AlignFuture(late, svc)
+    svc.inflight["w9"] = [InflightBatch(        # launched, never harvested
+        worker="w9", kernel=late.kernel, bucket=(64, 64),
+        reqs=[late], gens=[late.gen], out=None)]
+    requeued = svc.redispatch_dead()            # w9 never beat -> dead
     print(f"\nstraggler handling: {requeued} request(s) re-queued after "
-          f"worker death; drained again -> {svc.drain()} done")
+          f"worker death; drained again -> {svc.drain()} done; "
+          f"future resolved: {fut.done()}")
 
 
 if __name__ == "__main__":

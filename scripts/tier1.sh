@@ -12,3 +12,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python -m benchmarks.run --quick --only bucketing
 python -m benchmarks.run --quick --only mapping
+python -m benchmarks.run --quick --only serving

@@ -14,7 +14,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.runtime import plan as plan_mod
 from repro.runtime import registry
@@ -48,23 +47,20 @@ def align_batch(spec: T.DPKernelSpec, params, queries, refs,
 def make_sharded_aligner(spec: T.DPKernelSpec, mesh, axis: str = "data",
                          engine_name: str = "wavefront",
                          with_traceback: bool = True):
-    """Return a jitted aligner whose batch axis is sharded over ``axis``.
+    """Return an aligner whose batch axis is sharded over ``axis``.
 
     The global batch must divide the axis size; each device group runs an
-    independent channel (N_K) of vmapped blocks (N_B).  The engine still
-    resolves through the runtime registry; the sharded executable keeps
-    its own jit because its identity includes the mesh/shardings.
+    independent channel (N_K) of vmapped blocks (N_B).  The engine
+    resolves through the runtime registry and the executable comes from
+    the shared plan cache — the mesh/shardings are part of the cache key
+    (``PlanKey.placement``), so sharded and local serving share one
+    substrate and ``plan_cache_info`` sees every compiled shape.
     """
-    batch_sharding = NamedSharding(mesh, P(axis))
-    repl = NamedSharding(mesh, P())
-
-    @functools.partial(jax.jit,
-                       in_shardings=(repl, batch_sharding, batch_sharding,
-                                     batch_sharding, batch_sharding),
-                       out_shardings=batch_sharding)
-    def aligner(params, queries, refs, q_lens, r_lens):
-        return align_batch(spec, params, queries, refs, q_lens, r_lens,
-                           engine_name=engine_name,
-                           with_traceback=with_traceback)
+    def aligner(params, queries, refs, q_lens=None, r_lens=None):
+        plan = plan_mod.get_plan(
+            spec, engine_name, queries.shape[1:], refs.shape[1:],
+            batch_size=queries.shape[0], with_traceback=with_traceback,
+            mesh=mesh, mesh_axis=axis)
+        return plan(params, queries, refs, q_lens, r_lens)
 
     return aligner

@@ -61,3 +61,14 @@ class HeartbeatMonitor:
 
     def alive_workers(self, now: Optional[float] = None) -> List[str]:
         return [w for w, s in self.fleet(now).items() if s == ALIVE]
+
+    def dead_workers(self, now: Optional[float] = None) -> List[str]:
+        """*Tracked* workers past ``dead_after`` (fleet introspection).
+
+        A pipelined dispatcher beats once per launch and once per harvest,
+        so a worker wedged inside a device sync stops beating mid-batch
+        and shows up here.  Workers that never beat at all are not
+        tracked and therefore absent — redispatch logic should query
+        ``status(worker)``, which reports unknown workers as DEAD.
+        """
+        return [w for w, s in self.fleet(now).items() if s == DEAD]

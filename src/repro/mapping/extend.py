@@ -70,13 +70,14 @@ def make_job(ref: np.ndarray, read: np.ndarray, ch: chain_mod.ChainResult,
 
 
 def extend_jobs(jobs: list, *, engine_name: str = "wavefront",
-                block: int = 8) -> list:
+                block: int = 8, pipeline_depth: int = 2) -> list:
     """Run all extension jobs; returns per-job dicts in input order.
 
     Jobs group by band (one semiglobal spec each), and within a band by
     length bucket via the runtime's packed dispatch — this is where a
     mixed-length read stream puts real multi-bucket load on the plan
-    cache.
+    cache.  ``pipeline_depth`` flows to ``run_pairs`` so extension blocks
+    overlap host padding with device compute just like the serving path.
     """
     results: list = [None] * len(jobs)
     by_band: dict[int, list[int]] = {}
@@ -87,7 +88,8 @@ def extend_jobs(jobs: list, *, engine_name: str = "wavefront",
         pairs = [(jobs[i].read, jobs[i].window) for i in idxs]
         outs = dispatch.run_pairs(spec, params, pairs,
                                   engine_name=engine_name, block=block,
-                                  with_traceback=True)
+                                  with_traceback=True,
+                                  pipeline_depth=pipeline_depth)
         for i, aln in zip(idxs, outs):
             job = jobs[i]
             cigar = sam_mod.moves_to_sam_cigar(aln.moves, aln.n_moves)

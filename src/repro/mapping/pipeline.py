@@ -58,7 +58,8 @@ class ReadMapper:
                  max_occ: int = 64, max_dist: int = 512, max_skew: int = 64,
                  min_chain_score: float = 12.0,
                  min_extend_frac: float = 0.25,
-                 engine_name: str = "wavefront", rname: str = "ref"):
+                 engine_name: str = "wavefront", rname: str = "ref",
+                 pipeline_depth: int = 2):
         self.ref = np.asarray(ref, np.uint8)
         self.index = index_mod.build_index(self.ref, k=k, w=w)
         self.margin = margin
@@ -69,6 +70,7 @@ class ReadMapper:
         self.min_extend_frac = min_extend_frac
         self.engine_name = engine_name
         self.rname = rname
+        self.pipeline_depth = pipeline_depth
         # reads pad to at least one full minimizer window
         self._read_min_bucket = bucketing.bucket_length(k + w)
         self._seed_chain = jax.jit(functools.partial(
@@ -153,7 +155,8 @@ class ReadMapper:
             job_meta.append((i, flag, oriented, mapq, f1))
 
         ext = extend_mod.extend_jobs(jobs, engine_name=self.engine_name,
-                                     block=self.block)
+                                     block=self.block,
+                                     pipeline_depth=self.pipeline_depth)
         for (i, flag, oriented, mapq, f1), res in zip(job_meta, ext):
             # extension-score gate: a true placement scores near
             # match * read_len; impostors (e.g. one spurious anchor) fall

@@ -14,11 +14,13 @@ import jax.numpy as jnp
 
 from . import index as index_mod
 
-# int32 sort key = r_pos * QPOS_STRIDE + q_pos: keeps anchors grouped by
-# reference position with deterministic q_pos tie-breaks.  Bounds the
-# indexable reference to 2^31 / QPOS_STRIDE bases (~2 Mb), plenty for the
-# synthetic workloads; a 64-bit key is the lift for real genomes.
-QPOS_STRIDE = 1024
+# Anchors sort lexicographically by (r_pos, q_pos), invalid entries last.
+# The old packed key ``r_pos * 1024 + q_pos`` overflowed int32 beyond
+# ~2 Mb references, silently corrupting anchor order (wrong mappings, no
+# error); a two-key ``lexsort`` is the 64-bit-wide ordering without
+# requiring jax's x64 flag (``astype(int64)`` silently stays int32 when
+# x64 is off, which would just re-introduce the same bug), so the full
+# int32 coordinate range (~2 Gb references) keeps exact order.
 _INVALID = jnp.int32(2**31 - 1)
 
 
@@ -55,9 +57,7 @@ def seed_anchors(index: index_mod.MinimizerIndex, read, read_len,
 def top_anchors(q_pos, r_pos, valid, n_anchors: int):
     """Sort anchors by (r_pos, q_pos), invalid last, and keep the first
     ``n_anchors`` — the fixed-size input the chaining DP expects."""
-    key = jnp.where(valid,
-                    r_pos * QPOS_STRIDE + jnp.minimum(q_pos, QPOS_STRIDE - 1),
-                    _INVALID)
-    order = jnp.argsort(key)[:n_anchors]
-    return (q_pos[order], r_pos[order],
-            valid[order] & (key[order] != _INVALID))
+    r_key = jnp.where(valid, r_pos, _INVALID)
+    q_key = jnp.where(valid, q_pos, _INVALID)
+    order = jnp.lexsort((q_key, r_key))[:n_anchors]   # r primary, q tie-break
+    return q_pos[order], r_pos[order], valid[order]

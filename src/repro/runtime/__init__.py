@@ -12,14 +12,15 @@ from .registry import (Engine, available_engines, get_engine,
 from .plan import (CompiledPlan, align_impl, clear_plan_cache, get_plan,
                    plan_cache_info)
 from .bucketing import (Bucket, bucket_length, bucket_shape,
-                        inverse_permutation, pack_by_bucket, pad_to_bucket)
-from .dispatch import run_pairs
+                        inverse_permutation, max_grid_bucket,
+                        pack_by_bucket, pad_to_bucket)
+from .dispatch import run_pairs, run_pipelined
 
 __all__ = [
     "Engine", "available_engines", "get_engine", "register_engine",
     "CompiledPlan", "align_impl", "clear_plan_cache", "get_plan",
     "plan_cache_info",
     "Bucket", "bucket_length", "bucket_shape", "inverse_permutation",
-    "pack_by_bucket", "pad_to_bucket",
-    "run_pairs",
+    "max_grid_bucket", "pack_by_bucket", "pad_to_bucket",
+    "run_pairs", "run_pipelined",
 ]

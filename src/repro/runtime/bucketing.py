@@ -19,22 +19,49 @@ DEFAULT_MIN_BUCKET = 16
 DEFAULT_GROWTH = 2.0
 
 
+def max_grid_bucket(max_bucket: int, min_bucket: int = DEFAULT_MIN_BUCKET,
+                    growth: float = DEFAULT_GROWTH) -> int:
+    """Largest grid bucket ``min_bucket * growth**k <= max_bucket``.
+
+    A cap below the grid's smallest bucket is a configuration error —
+    every shape it admitted would be off-grid."""
+    if growth <= 1.0:
+        raise ValueError(f"growth must be > 1, got {growth}")
+    if min_bucket > max_bucket:
+        raise ValueError(
+            f"max_bucket {max_bucket} is below min_bucket {min_bucket}")
+    cap = min_bucket
+    while True:
+        nxt = int(math.ceil(cap * growth))
+        if nxt > max_bucket:
+            return cap
+        cap = nxt
+
+
 def bucket_length(n: int, min_bucket: int = DEFAULT_MIN_BUCKET,
                   max_bucket: Optional[int] = None,
                   growth: float = DEFAULT_GROWTH) -> int:
-    """Smallest bucket ``min_bucket * growth**k >= n`` (capped at
-    ``max_bucket``).  ``growth=2`` gives power-of-two buckets."""
+    """Smallest bucket ``min_bucket * growth**k >= n``; ``growth=2``
+    gives power-of-two buckets.
+
+    ``max_bucket`` snaps *down* to the largest grid bucket <= it, and
+    lengths above that snapped cap raise: an off-grid cap (say 100 on the
+    16/32/64/128 grid) must never leak an off-grid 100-wide shape into the
+    plan cache, silently splitting it per clamped length.
+    """
     if n < 0:
         raise ValueError(f"negative length {n}")
     if growth <= 1.0:
         raise ValueError(f"growth must be > 1, got {growth}")
+    if max_bucket is not None:
+        cap = max_grid_bucket(max_bucket, min_bucket, growth)
+        if n > cap:
+            raise ValueError(
+                f"length {n} exceeds largest bucket {cap} "
+                f"(max_bucket={max_bucket})")
     b = min_bucket
     while b < n:
         b = int(math.ceil(b * growth))
-    if max_bucket is not None:
-        if n > max_bucket:
-            raise ValueError(f"length {n} exceeds max_bucket {max_bucket}")
-        b = min(b, max_bucket)
     return b
 
 

@@ -7,10 +7,18 @@ results back in request order.  Internally the pairs are grouped by
 runs through the shared ``CompiledPlan`` cache — so a workload that mixes
 buckets (e.g. the read mapper's per-chain extension windows) exercises one
 compiled executable per ``(bucket, block)`` instead of one per request.
+
+``run_pipelined`` is the double-buffered dispatcher of DP-HLS §5.3 in
+host/device form: *launch* enqueues a batch on the device (JAX async
+dispatch returns before the computation finishes) and *harvest* blocks on
+its results one batch behind, so the host pads and post-processes batch N
+while batch N+1 computes.  ``run_pairs`` and ``serve.AlignmentService``
+both drive their batch streams through it.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+import collections
+from typing import Callable, Iterable, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,6 +27,43 @@ import repro.core.types as T
 
 from . import bucketing
 from . import plan as plan_mod
+
+
+def run_pipelined(items: Iterable, launch: Callable, harvest: Callable, *,
+                  depth: int = 2, on_abandon: Optional[Callable] = None
+                  ) -> int:
+    """Drive ``launch``/``harvest`` over a batch stream, ``depth - 1``
+    launches ahead of the harvests.
+
+    ``launch(item)`` must enqueue device work and return without blocking
+    (its return value is handed to ``harvest(item, out)``, which is where
+    device->host sync happens).  ``depth=1`` degenerates to the fully
+    synchronous launch-then-harvest loop.  On an exception the un-harvested
+    window is handed to ``on_abandon(item, out)`` (callers requeue there)
+    before the exception propagates; a *launch* failure is the launcher's
+    own to clean up — its item never enters the window.  Returns the sum
+    of ``harvest`` return values (``None`` counts as 0).
+    """
+    if depth < 1:
+        raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+    window: collections.deque = collections.deque()
+    total = 0
+    try:
+        for item in items:
+            window.append((item, launch(item)))
+            while len(window) >= depth:
+                it, out = window.popleft()
+                total += harvest(it, out) or 0
+        while window:
+            it, out = window.popleft()
+            total += harvest(it, out) or 0
+    except BaseException:
+        if on_abandon is not None:
+            while window:
+                it, out = window.popleft()
+                on_abandon(it, out)
+        raise
+    return total
 
 
 def _np_char_dtype(spec):
@@ -43,11 +88,15 @@ def run_pairs(spec, params, pairs: Sequence[tuple], *,
               engine_name: str = "wavefront", block: int = 8,
               with_traceback: bool = True, mode: str = "align",
               min_bucket: int = bucketing.DEFAULT_MIN_BUCKET,
-              max_bucket: Optional[int] = None) -> list:
+              max_bucket: Optional[int] = None,
+              pipeline_depth: int = 2) -> list:
     """Run every ``(query, ref)`` pair; results come back in input order.
 
     Each bucketed block is padded to exactly ``block`` rows (tail rows are
     length-1 dummies) so repeated calls reuse one plan per bucket shape.
+    Blocks stream through ``run_pipelined``: padding the next block
+    overlaps the device computing the current one (``pipeline_depth=1``
+    restores the synchronous path).
     """
     pairs = [(np.asarray(q), np.asarray(r)) for q, r in pairs]
     lengths = [(q.shape[0], r.shape[0]) for q, r in pairs]
@@ -57,7 +106,8 @@ def run_pairs(spec, params, pairs: Sequence[tuple], *,
     char = spec.char_shape
     dtype = _np_char_dtype(spec)
     results: list = [None] * len(pairs)
-    for b in batches:
+
+    def launch(b):
         bq, br = b.bucket
         qs = np.zeros((block, bq) + char, dtype)
         rs = np.zeros((block, br) + char, dtype)
@@ -72,8 +122,12 @@ def run_pairs(spec, params, pairs: Sequence[tuple], *,
                                  (br,) + char, batch_size=block,
                                  with_traceback=with_traceback, mode=mode,
                                  donate=True)
-        out = plan(params, jnp.asarray(qs), jnp.asarray(rs),
-                   jnp.asarray(ql), jnp.asarray(rl))
+        return plan(params, jnp.asarray(qs), jnp.asarray(rs),
+                    jnp.asarray(ql), jnp.asarray(rl))
+
+    def harvest(b, out):
         for row, idx in enumerate(b.indices):
             results[idx] = _slice_out(out, row)
+
+    run_pipelined(batches, launch, harvest, depth=pipeline_depth)
     return results

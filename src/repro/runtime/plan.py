@@ -59,6 +59,7 @@ class PlanKey:
     batch_size: Optional[int]        # None = single pair
     with_traceback: bool
     mode: str = "align"              # 'align' | 'fill'
+    placement: Optional[str] = None  # e.g. 'data@data=8' for sharded plans
 
 
 class CompiledPlan:
@@ -71,7 +72,8 @@ class CompiledPlan:
     """
 
     def __init__(self, key: PlanKey, spec: T.DPKernelSpec,
-                 engine_name: str, donate: bool = False):
+                 engine_name: str, donate: bool = False,
+                 mesh=None, mesh_axis: str = "data"):
         self.key = key
         self.spec = spec
         self.calls = 0
@@ -99,7 +101,20 @@ class CompiledPlan:
         donate_argnums = ()
         if donate and jax.default_backend() != "cpu":
             donate_argnums = (1, 2)
-        self._fn = jax.jit(fn, donate_argnums=donate_argnums)
+        if mesh is None:
+            self._fn = jax.jit(fn, donate_argnums=donate_argnums)
+        else:
+            # sharded plan: batch axis over ``mesh_axis``, params replicated
+            # (the former private jit of core.batch.make_sharded_aligner,
+            # folded into the shared cache)
+            if key.batch_size is None:
+                raise ValueError("sharded plans require batch_size")
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            bsh = NamedSharding(mesh, P(mesh_axis))
+            repl = NamedSharding(mesh, P())
+            self._fn = jax.jit(
+                fn, in_shardings=(repl, bsh, bsh, bsh, bsh),
+                out_shardings=bsh, donate_argnums=donate_argnums)
 
     @property
     def batch_size(self):
@@ -135,24 +150,38 @@ _LOCK = threading.Lock()
 _STATS = {"hits": 0, "misses": 0}
 
 
+def _placement(mesh, mesh_axis: str) -> Optional[str]:
+    if mesh is None:
+        return None
+    dims = "x".join(f"{n}={s}" for n, s in
+                    zip(mesh.axis_names, mesh.devices.shape))
+    return f"{mesh_axis}@{dims}"
+
+
 def get_plan(spec: T.DPKernelSpec, engine_name: str,
              q_shape: tuple, r_shape: tuple, *,
              batch_size: Optional[int] = None,
              with_traceback: bool = True, mode: str = "align",
-             donate: bool = False) -> CompiledPlan:
+             donate: bool = False, mesh=None,
+             mesh_axis: str = "data") -> CompiledPlan:
     """Fetch (or build) the shared plan for one bucketed input shape.
 
     ``q_shape``/``r_shape`` are per-pair shapes including char dims (the
     bucket shape); ``batch_size=None`` compiles the single-pair variant.
-    The spec object itself keys the cache (two specs made by the same
+    With ``mesh`` the plan shards the batch axis over ``mesh_axis`` (the
+    mesh itself joins the cache key — sharded and local serving share one
+    substrate, but distinct meshes never share an executable).  The spec
+    object itself keys the cache (two specs made by the same
     ``kernels_zoo.make`` call share; distinct constructions do not —
     their closures could differ).
     """
     wtb = bool(with_traceback and spec.traceback is not None)
     if jax.default_backend() == "cpu":
         donate = False   # donation is a no-op on CPU; don't split the cache
+    if mesh is None:
+        mesh_axis = "data"   # axis is meaningless un-sharded; don't split
     cache_key = (spec, engine_name, tuple(q_shape), tuple(r_shape),
-                 batch_size, wtb, mode, donate)
+                 batch_size, wtb, mode, donate, mesh, mesh_axis)
     plan = _CACHE.get(cache_key)
     if plan is not None:
         _STATS["hits"] += 1
@@ -164,8 +193,9 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
             key = PlanKey(kernel=spec.name, engine=engine_name,
                           bucket_shape=(tuple(q_shape), tuple(r_shape)),
                           batch_size=batch_size, with_traceback=wtb,
-                          mode=mode)
-            plan = CompiledPlan(key, spec, engine_name, donate=donate)
+                          mode=mode, placement=_placement(mesh, mesh_axis))
+            plan = CompiledPlan(key, spec, engine_name, donate=donate,
+                                mesh=mesh, mesh_axis=mesh_axis)
             _CACHE[cache_key] = plan
         else:
             _STATS["hits"] += 1

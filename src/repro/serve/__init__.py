@@ -1,3 +1,4 @@
 from .engine import Request, ServeSession
-from .alignment_service import AlignRequest, AlignmentService
+from .alignment_service import (AlignFuture, AlignRequest, AlignmentService,
+                                InflightBatch)
 from .mapping_service import MapRequest, ReadMappingService

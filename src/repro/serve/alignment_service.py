@@ -4,36 +4,94 @@ This is the N_K x N_B arbiter of DP-HLS §5.3 at pod scale: requests queue
 up per ``(kernel, length-bucket)`` channel (heterogeneous kernels =
 multiple channels, exactly the paper's "mix of global and local
 aligners"), are padded to their *bucket* — not a global ``max_len`` — and
-dispatched through the shared ``repro.runtime`` compiled-plan cache (or a
-sharded aligner over the mesh 'data' axis: N_K channels).  A 40-base
-query therefore pays the wavefront cost of a 64-cell bucket, not of the
-service-wide maximum.  A heartbeat-driven deadline re-dispatches batches
-whose worker goes quiet (ft.heartbeat) — the straggler story the FPGA
-host code never needed but a 1000-node deployment does.
+dispatched through the shared ``repro.runtime`` compiled-plan cache
+(sharded plans over the mesh 'data' axis live in the same cache: N_K
+channels).  A 40-base query therefore pays the wavefront cost of a
+64-cell bucket, not of the service-wide maximum.
+
+Dispatch is *pipelined* the way the paper double-buffers host<->FPGA
+transfer against kernel compute (§5.3): ``submit`` returns a lightweight
+future, and the dispatcher loop (``wait``; ``drain`` is the synchronous-
+looking compat wrapper) launches batch N+1 — host-side padding and all —
+while batch N still computes on device, harvesting device results one
+batch behind via JAX async dispatch.  ``pipeline_depth=1`` restores the
+strictly synchronous launch-then-harvest order.
+
+A heartbeat-driven deadline re-dispatches batches whose worker goes quiet
+(ft.heartbeat) — the straggler story the FPGA host code never needed but
+a 1000-node deployment does.  Every request carries a generation counter:
+a batch's results only land if the request was not re-submitted since
+launch, so a late original and its re-dispatched copy can never both
+complete (``gen`` mismatch discards the stale write).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batch as core_batch, kernels_zoo
 from repro.core.traceback import moves_to_cigar
-from repro.ft import HeartbeatMonitor
+from repro.ft import DEAD, HeartbeatMonitor
 from repro.runtime import bucketing
+from repro.runtime import dispatch as dispatch_mod
 from repro.runtime import plan as plan_mod
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)   # identity semantics: ndarray fields
 class AlignRequest:
     rid: int
     kernel: str                  # kernels_zoo name
     query: np.ndarray
     ref: np.ndarray
     result: Optional[dict] = None
+    gen: int = 0                 # bumped on every re-submission
+
+
+class AlignFuture:
+    """Lightweight handle returned by ``submit``; resolving it drives the
+    service's dispatcher loop (single-process: there is no background
+    thread — ``result()`` pumps ``wait`` until this request completes)."""
+
+    __slots__ = ("req", "_svc")
+
+    def __init__(self, req: AlignRequest, svc: "AlignmentService"):
+        self.req = req
+        self._svc = svc
+
+    def done(self) -> bool:
+        return self.req.result is not None
+
+    def result(self, worker: str = "w0") -> dict:
+        if not self.done():
+            self._svc.wait([self], worker=worker)
+        if self.req.result is None:
+            raise RuntimeError(f"request {self.req.rid} did not complete")
+        return self.req.result
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return f"AlignFuture(rid={self.req.rid}, {state})"
+
+
+@dataclasses.dataclass(eq=False)   # identity semantics: held in lists
+class InflightBatch:
+    """One launched batch: device output not yet harvested.
+
+    ``gens`` snapshots each request's generation at launch; harvest only
+    writes results for requests still on that generation (a re-dispatch
+    bumps ``req.gen``, so the stale original is discarded).
+    """
+    worker: str
+    kernel: str
+    bucket: Tuple[int, int]
+    reqs: List[AlignRequest]
+    gens: List[int]
+    out: object                      # device arrays (async), None in tests
+    cancelled: bool = False
 
 
 QueueKey = Tuple[str, Tuple[int, int]]   # (kernel, (q_bucket, r_bucket))
@@ -42,27 +100,35 @@ QueueKey = Tuple[str, Tuple[int, int]]   # (kernel, (q_bucket, r_bucket))
 class AlignmentService:
     """Single-process reference implementation of the dispatch logic.
 
-    ``mesh=None`` runs un-sharded (CPU smoke) through the runtime plan
-    cache; with a mesh, each kernel channel jits a sharded aligner over
-    the 'data' axis.  ``max_len`` caps the largest bucket; ``min_bucket``
-    floors the smallest.
+    ``mesh=None`` runs un-sharded (CPU smoke); with a mesh, each kernel
+    channel resolves a sharded plan over the 'data' axis — both paths go
+    through the runtime plan cache.  ``max_len`` caps request lengths
+    (the largest bucket is ``max_len`` snapped up to the bucket grid);
+    ``min_bucket`` floors the smallest.  ``pipeline_depth`` is how many
+    batches may be in flight on the device at once (1 = synchronous).
     """
 
     def __init__(self, max_len: int = 256, block: int = 8, mesh=None,
                  engine_name: str = "wavefront", with_traceback: bool = True,
                  redispatch_after: float = 60.0,
                  min_bucket: int = bucketing.DEFAULT_MIN_BUCKET,
-                 coalesce: bool = True):
+                 coalesce: bool = True, pipeline_depth: int = 2):
         self.max_len, self.block = max_len, block
         self.min_bucket = min(min_bucket, max_len)
+        # largest admissible bucket: max_len snapped *up* to the grid, so
+        # every request <= max_len has an on-grid bucket (an off-grid cap
+        # must never become a compiled shape)
+        self.max_bucket = bucketing.bucket_length(
+            max_len, min_bucket=self.min_bucket)
         self.coalesce = coalesce
+        self.pipeline_depth = pipeline_depth
         self.mesh = mesh
         self.engine_name = engine_name
         self.with_traceback = with_traceback
         self.queues: Dict[QueueKey, List[AlignRequest]] = {}
         self.channels: Dict[str, tuple] = {}   # kernel -> (spec, params, fn)
         self.monitor = HeartbeatMonitor(dead_after=redispatch_after)
-        self.inflight: Dict[str, tuple] = {}   # worker -> (kernel, batch)
+        self.inflight: Dict[str, List[InflightBatch]] = {}
         # per-batch shape telemetry, bounded so a long-lived service
         # doesn't accumulate host memory
         self.dispatches = collections.deque(maxlen=4096)
@@ -70,7 +136,7 @@ class AlignmentService:
     def _bucket(self, req: AlignRequest) -> Tuple[int, int]:
         return bucketing.bucket_shape(
             len(req.query), len(req.ref),
-            min_bucket=self.min_bucket, max_bucket=self.max_len)
+            min_bucket=self.min_bucket, max_bucket=self.max_bucket)
 
     def _channel(self, kernel: str):
         """Per-kernel spec/params (+ sharded aligner when on a mesh)."""
@@ -85,10 +151,23 @@ class AlignmentService:
             self.channels[kernel] = (spec, params, fn)
         return self.channels[kernel]
 
-    def submit(self, req: AlignRequest):
+    # -- intake ------------------------------------------------------------
+    def _enqueue(self, req: AlignRequest) -> None:
         key = (req.kernel, self._bucket(req))
         self.queues.setdefault(key, []).append(req)
 
+    def submit(self, req: AlignRequest) -> AlignFuture:
+        if len(req.query) > self.max_len or len(req.ref) > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: lengths ({len(req.query)}, "
+                f"{len(req.ref)}) exceed max_len {self.max_len}")
+        self._enqueue(req)
+        return AlignFuture(req, self)
+
+    def submit_all(self, reqs: Sequence[AlignRequest]) -> List[AlignFuture]:
+        return [self.submit(r) for r in reqs]
+
+    # -- batch formation ---------------------------------------------------
     def _pad_batch(self, reqs: List[AlignRequest], bucket: Tuple[int, int],
                    char_shape, dtype):
         n = self.block
@@ -106,37 +185,6 @@ class AlignmentService:
         ql[len(reqs):] = 1
         rl[len(reqs):] = 1
         return qs, rs, ql, rl
-
-    def _dispatch(self, kernel: str, bucket: Tuple[int, int],
-                  reqs: List[AlignRequest], coalesced: bool = False):
-        spec, params, sharded_fn = self._channel(kernel)
-        qs, rs, ql, rl = self._pad_batch(
-            reqs, bucket, spec.char_shape,
-            np.dtype(jnp.dtype(spec.char_dtype).name))
-        self.dispatches.append({"kernel": kernel, "bucket": bucket,
-                                "n": len(reqs), "coalesced": coalesced})
-        if sharded_fn is not None:
-            out = sharded_fn(params, jnp.asarray(qs), jnp.asarray(rs),
-                             jnp.asarray(ql), jnp.asarray(rl))
-        else:
-            plan = plan_mod.get_plan(
-                spec, self.engine_name, qs.shape[1:], rs.shape[1:],
-                batch_size=self.block,
-                with_traceback=self.with_traceback and
-                spec.traceback is not None,
-                donate=True)
-            out = plan(params, jnp.asarray(qs), jnp.asarray(rs),
-                       jnp.asarray(ql), jnp.asarray(rl))
-        for i, r in enumerate(reqs):
-            res = {"score": float(np.asarray(out.score)[i]),
-                   "end": (int(np.asarray(out.end_i)[i]),
-                           int(np.asarray(out.end_j)[i]))}
-            if getattr(out, "moves", None) is not None:
-                res["cigar"] = moves_to_cigar(
-                    np.asarray(out.moves)[i],
-                    int(np.asarray(out.n_moves)[i]))
-            r.result = res
-        return len(reqs)
 
     def _coalesce_batch(self, kernel: str, bucket: Tuple[int, int],
                         reqs: List[AlignRequest]) -> Tuple[int, int]:
@@ -164,43 +212,163 @@ class AlignmentService:
                 break
         return out_bucket
 
-    def drain(self, worker: str = "w0") -> int:
-        """Process all queued requests; returns #completed.
+    def _next_batch(self):
+        """Pop the next (kernel, bucket, reqs, coalesced) batch, smallest
+        bucket first, or None when every queue is empty."""
+        pending = [(k, b) for (k, b) in sorted(
+            self.queues, key=lambda kb: (kb[0], kb[1][0] * kb[1][1]))
+            if self.queues[(k, b)]]
+        if not pending:
+            return None
+        kernel, bucket = pending[0]
+        queue = self.queues[(kernel, bucket)]
+        reqs = [queue.pop(0) for _ in range(min(self.block, len(queue)))]
+        coalesced = False
+        if self.coalesce and not queue and len(reqs) < self.block:
+            out_bucket = self._coalesce_batch(kernel, bucket, reqs)
+            coalesced = out_bucket != bucket
+            bucket = out_bucket
+        return kernel, bucket, reqs, coalesced
 
-        Buckets drain smallest-first; with ``coalesce`` a trailing partial
-        batch is topped up from the next-larger bucket's queue (ROADMAP's
-        cross-bucket batch coalescing) instead of dispatching half-empty.
+    # -- launch / harvest (the two pipeline stages) ------------------------
+    def _launch(self, worker: str, item) -> InflightBatch:
+        """Pad one batch and enqueue it on the device (non-blocking under
+        JAX async dispatch).  On failure the popped requests go straight
+        back to their queues — a raising plan must never lose work."""
+        kernel, bucket, reqs, coalesced = item
+        self.monitor.beat(worker)
+        try:
+            spec, params, sharded_fn = self._channel(kernel)
+            qs, rs, ql, rl = self._pad_batch(
+                reqs, bucket, spec.char_shape,
+                np.dtype(jnp.dtype(spec.char_dtype).name))
+            if sharded_fn is not None:
+                out = sharded_fn(params, jnp.asarray(qs), jnp.asarray(rs),
+                                 jnp.asarray(ql), jnp.asarray(rl))
+            else:
+                plan = plan_mod.get_plan(
+                    spec, self.engine_name, qs.shape[1:], rs.shape[1:],
+                    batch_size=self.block,
+                    with_traceback=self.with_traceback and
+                    spec.traceback is not None,
+                    donate=True)
+                out = plan(params, jnp.asarray(qs), jnp.asarray(rs),
+                           jnp.asarray(ql), jnp.asarray(rl))
+        except BaseException:
+            for r in reqs:
+                r.gen += 1
+                self._enqueue(r)
+            raise
+        ib = InflightBatch(worker=worker, kernel=kernel, bucket=bucket,
+                           reqs=reqs, gens=[r.gen for r in reqs], out=out)
+        self.inflight.setdefault(worker, []).append(ib)
+        self.dispatches.append({"kernel": kernel, "bucket": bucket,
+                                "n": len(reqs), "coalesced": coalesced})
+        return ib
+
+    def _harvest(self, item, ib: InflightBatch) -> int:
+        """Block on one launched batch and land its results.
+
+        Stale writes are discarded: a request re-submitted since launch
+        (``gen`` mismatch, e.g. via ``redispatch_dead``) or already
+        completed keeps its authoritative result.  On failure the still-
+        incomplete requests are requeued; the batch always leaves
+        ``inflight``.
         """
         done = 0
-        while True:
-            pending = [(k, b) for (k, b) in sorted(
-                self.queues, key=lambda kb: (kb[0], kb[1][0] * kb[1][1]))
-                if self.queues[(k, b)]]
-            if not pending:
-                break
-            kernel, bucket = pending[0]
-            queue = self.queues[(kernel, bucket)]
-            reqs = [queue.pop(0) for _ in range(min(self.block, len(queue)))]
-            coalesced = False
-            if self.coalesce and not queue and len(reqs) < self.block:
-                out_bucket = self._coalesce_batch(kernel, bucket, reqs)
-                coalesced = out_bucket != bucket
-                bucket = out_bucket
-            self.monitor.beat(worker)
-            self.inflight[worker] = (kernel, reqs)
-            done += self._dispatch(kernel, bucket, reqs,
-                                   coalesced=coalesced)
-            del self.inflight[worker]
-            self.monitor.beat(worker)
+        try:
+            if not ib.cancelled:
+                out = ib.out
+                score = np.asarray(out.score)       # sync point: blocks
+                end_i = np.asarray(out.end_i)
+                end_j = np.asarray(out.end_j)
+                moves = n_moves = None
+                if getattr(out, "moves", None) is not None:
+                    moves = np.asarray(out.moves)
+                    n_moves = np.asarray(out.n_moves)
+                for i, (r, gen) in enumerate(zip(ib.reqs, ib.gens)):
+                    if r.gen != gen or r.result is not None:
+                        continue                     # stale or double write
+                    res = {"score": float(score[i]),
+                           "end": (int(end_i[i]), int(end_j[i]))}
+                    if moves is not None:
+                        res["cigar"] = moves_to_cigar(moves[i],
+                                                      int(n_moves[i]))
+                    r.result = res
+                    done += 1
+        except BaseException:
+            self._requeue_incomplete(ib)
+            raise
+        finally:
+            self._forget(ib)
+            self.monitor.beat(ib.worker)
         return done
 
-    def redispatch_dead(self, now: Optional[float] = None) -> int:
-        """Requeue in-flight batches whose worker stopped beating."""
+    def _requeue_incomplete(self, ib: InflightBatch) -> int:
+        """Put a batch's unfinished requests back on their queues with a
+        bumped generation (so any late device result is discarded)."""
+        ib.cancelled = True
         n = 0
-        for worker, (kernel, reqs) in list(self.inflight.items()):
-            if self.monitor.status(worker, now) == "dead":
-                for r in reqs:
-                    self.submit(r)
-                del self.inflight[worker]
-                n += len(reqs)
+        for r, gen in zip(ib.reqs, ib.gens):
+            if r.result is not None or r.gen != gen:
+                continue
+            r.gen += 1
+            self._enqueue(r)
+            n += 1
+        return n
+
+    # -- the dispatcher loop -----------------------------------------------
+    def wait(self, futures: Optional[Sequence[AlignFuture]] = None,
+             worker: str = "w0") -> int:
+        """Run the pipelined dispatcher until ``futures`` resolve (or, with
+        ``futures=None``, until every queue is empty).  Returns #completed.
+
+        Host padding of batch N+1 overlaps device compute of batch N
+        (``runtime.dispatch.run_pipelined``); heartbeats fire at every
+        launch and harvest, so a worker wedged inside a device sync goes
+        quiet and ``redispatch_dead`` can reclaim its batches.
+        """
+        def batches() -> Iterator:
+            while True:
+                if futures is not None and all(f.done() for f in futures):
+                    return
+                item = self._next_batch()
+                if item is None:
+                    return
+                yield item
+
+        return dispatch_mod.run_pipelined(
+            batches(),
+            lambda item: self._launch(worker, item),
+            self._harvest,
+            depth=self.pipeline_depth,
+            on_abandon=lambda item, ib: (self._requeue_incomplete(ib),
+                                         self._forget(ib)))
+
+    def _forget(self, ib: InflightBatch) -> None:
+        batches = self.inflight.get(ib.worker, [])
+        if ib in batches:
+            batches.remove(ib)
+        if not batches:
+            self.inflight.pop(ib.worker, None)
+
+    def drain(self, worker: str = "w0") -> int:
+        """Compat wrapper: submit_all has happened via ``submit``; process
+        everything queued and return #completed."""
+        return self.wait(worker=worker)
+
+    def redispatch_dead(self, now: Optional[float] = None) -> int:
+        """Requeue in-flight batches whose worker stopped beating.
+
+        Requeued requests get a new generation, so if the original batch
+        does eventually finish, its harvest is discarded — exactly one
+        result per request ever lands.
+        """
+        n = 0
+        for worker in list(self.inflight):
+            # status() is DEAD both for tracked workers past the deadline
+            # and for workers that never beat at all
+            if self.monitor.status(worker, now) == DEAD:
+                for ib in self.inflight.pop(worker, []):
+                    n += self._requeue_incomplete(ib)
         return n

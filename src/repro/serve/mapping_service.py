@@ -2,10 +2,15 @@
 
 Where ``AlignmentService`` serves pre-paired (query, ref) requests, this
 channel serves *reads only*: a ``ReadMapper`` owns the reference index
-and every drained block runs the full seed-chain-extend pipeline, whose
-extension stage lands on the same shared CompiledPlan cache as the align
-channels.  Results attach to the submitted request objects (same contract
-as ``AlignRequest``), so callers keep their own ordering.
+and every drained batch runs the full seed-chain-extend pipeline, whose
+extension stage lands on the same shared CompiledPlan cache — and the
+same ``runtime.dispatch.run_pipelined`` overlap — as the align channels.
+``drain`` hands the whole queue (up to ``max_batch``) to one
+``map_reads`` call instead of chopping it into tiny chunks, so the
+extension stage sees enough bucketed blocks to keep the device busy
+while the host pads and post-processes.  Results attach to the submitted
+request objects (same contract as ``AlignRequest``), so callers keep
+their own ordering.
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ import numpy as np
 from repro.mapping import ReadMapper
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)   # identity semantics: ndarray field
 class MapRequest:
     rid: int
     read: np.ndarray                 # uint8 DNA codes, as sequenced
@@ -26,13 +31,21 @@ class MapRequest:
 
 
 class ReadMappingService:
-    """Single-process reference implementation of the map_reads channel."""
+    """Single-process reference implementation of the map_reads channel.
 
-    def __init__(self, ref, block: int = 16, mapper: Optional[ReadMapper] = None,
-                 **mapper_kw):
+    ``block`` is the mapper's internal batch row count (ignored when an
+    explicit ``mapper`` is passed); ``max_batch`` caps how many queued
+    reads one ``drain`` step hands to the mapper — bounded by default so
+    a deep backlog can't balloon the mapper's power-of-two host staging
+    arrays (``None`` = the whole queue).
+    """
+
+    def __init__(self, ref, block: int = 16,
+                 mapper: Optional[ReadMapper] = None,
+                 max_batch: Optional[int] = 256, **mapper_kw):
         self.mapper = mapper if mapper is not None else ReadMapper(
-            ref, **mapper_kw)
-        self.block = block
+            ref, block=block, **mapper_kw)
+        self.max_batch = max_batch
         self.queue: List[MapRequest] = []
         self.dispatches = collections.deque(maxlen=4096)
 
@@ -40,14 +53,24 @@ class ReadMappingService:
         self.queue.append(req)
 
     def drain(self) -> int:
-        """Map all queued reads in ``block``-sized batches; returns #done."""
+        """Map all queued reads; returns #done.
+
+        A failing ``map_reads`` puts the popped requests back at the
+        front of the queue before re-raising — a raising pipeline must
+        never lose work (same contract as ``AlignmentService``).
+        """
         done = 0
         while self.queue:
-            reqs = [self.queue.pop(0)
-                    for _ in range(min(self.block, len(self.queue)))]
-            records = self.mapper.map_reads(
-                [r.read for r in reqs],
-                names=[f"r{r.rid}" for r in reqs])
+            take = len(self.queue) if self.max_batch is None else \
+                min(self.max_batch, len(self.queue))
+            reqs = [self.queue.pop(0) for _ in range(take)]
+            try:
+                records = self.mapper.map_reads(
+                    [r.read for r in reqs],
+                    names=[f"r{r.rid}" for r in reqs])
+            except BaseException:
+                self.queue[:0] = reqs
+                raise
             self.dispatches.append({"n": len(reqs)})
             for req, rec in zip(reqs, records):
                 req.result = {

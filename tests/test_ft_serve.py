@@ -20,6 +20,7 @@ def test_heartbeat_states():
     assert m.status("w1", now=8.9) == STRAGGLER      # 4.9s vs 1s median
     assert m.status("w1", now=15.1) == DEAD
     assert m.status("unknown", now=0.0) == DEAD
+    assert m.dead_workers(now=14.9) == ["w1"]        # w0 is only a straggler
     # at 7.5: w0 gap 2.5 (alive), w1 gap 3.5 (> 3x median -> straggler)
     assert m.alive_workers(now=7.5) == ["w0"]
 
@@ -61,18 +62,189 @@ def test_alignment_service_end_to_end(rng):
         assert r.result["score"] == pytest.approx(float(direct.score))
 
 
+def _fake_inflight(svc, worker, req):
+    """Install a hand-built in-flight batch (as if ``_launch`` ran but the
+    worker wedged before harvest)."""
+    from repro.serve import InflightBatch
+    ib = InflightBatch(worker=worker, kernel=req.kernel, bucket=(16, 16),
+                       reqs=[req], gens=[req.gen], out=None)
+    svc.inflight.setdefault(worker, []).append(ib)
+    return ib
+
+
 def test_alignment_service_redispatch():
     svc = AlignmentService(max_len=32, block=2, redispatch_after=5.0)
     svc.monitor.beat("w1", now=0.0)
-    svc.inflight["w1"] = ("global_affine",
-                          [AlignRequest(0, "global_affine",
-                                        np.zeros(4, np.uint8),
-                                        np.zeros(4, np.uint8))])
+    req = AlignRequest(0, "global_affine", np.zeros(4, np.uint8),
+                       np.zeros(4, np.uint8))
+    _fake_inflight(svc, "w1", req)
     assert svc.redispatch_dead(now=1.0) == 0        # still alive
     assert svc.redispatch_dead(now=20.0) == 1       # dead -> requeued
     requeued = [r for (k, _), q in svc.queues.items()
                 if k == "global_affine" for r in q]
     assert len(requeued) == 1
+    assert requeued[0].gen == 1                     # generation bumped
+
+
+def test_redispatch_discards_late_original_result(rng):
+    """A re-dispatched request and its original in-flight batch must not
+    both complete: the late original harvest is a stale generation and is
+    discarded (regression: double-completion race)."""
+    svc = AlignmentService(max_len=32, block=2, redispatch_after=5.0)
+    req = AlignRequest(0, "global_affine",
+                       rng.integers(0, 4, 12).astype(np.uint8),
+                       rng.integers(0, 4, 12).astype(np.uint8))
+    # launch on w1 for real (device output pending), then w1 goes dead
+    item = ("global_affine", (16, 16), [req], False)
+    stale = svc._launch("w1", item)
+    svc.monitor._last["w1"] = 0.0                   # silence its heartbeat
+    assert svc.redispatch_dead(now=100.0) == 1      # requeued, gen bumped
+    assert req.gen == 1 and req.result is None
+    # the re-dispatched copy completes on a healthy worker
+    assert svc.drain(worker="w2") == 1
+    first = req.result
+    assert first is not None
+    # ... and the late original batch finally lands: must be discarded
+    assert svc._harvest(item, stale) == 0
+    assert req.result is first
+
+
+def test_drain_requeues_requests_on_dispatch_failure(rng, monkeypatch):
+    """If dispatch raises, the popped requests must go back to the queues
+    and nothing may linger in ``inflight`` (regression: lost requests)."""
+    from repro.runtime import plan as plan_mod
+    svc = AlignmentService(max_len=64, block=4)
+    reqs = [AlignRequest(rid=i, kernel="global_affine",
+                         query=rng.integers(0, 4, 20).astype(np.uint8),
+                         ref=rng.integers(0, 4, 20).astype(np.uint8))
+            for i in range(6)]
+    for r in reqs:
+        svc.submit(r)
+    real_get_plan = plan_mod.get_plan
+    calls = {"n": 0}
+
+    def exploding_get_plan(*a, **kw):
+        calls["n"] += 1
+        raise RuntimeError("injected dispatch failure")
+
+    monkeypatch.setattr(plan_mod, "get_plan", exploding_get_plan)
+    with pytest.raises(RuntimeError, match="injected"):
+        svc.drain()
+    assert calls["n"] == 1
+    queued = [r for q in svc.queues.values() for r in q]
+    assert len(queued) == 6                         # nothing lost
+    assert svc.inflight == {}                       # nothing leaked
+    # after the fault clears, the same queue drains to completion
+    monkeypatch.setattr(plan_mod, "get_plan", real_get_plan)
+    assert svc.drain() == 6
+    assert all(r.result is not None for r in reqs)
+
+
+def test_wait_requeues_window_on_harvest_failure(rng, monkeypatch):
+    """A failure while harvesting batch N must also recover the launched-
+    but-unharvested batches behind it in the pipeline window."""
+    svc = AlignmentService(max_len=64, block=2, pipeline_depth=3)
+    reqs = [AlignRequest(rid=i, kernel="global_affine",
+                         query=rng.integers(0, 4, 20).astype(np.uint8),
+                         ref=rng.integers(0, 4, 20).astype(np.uint8))
+            for i in range(6)]
+    for r in reqs:
+        svc.submit(r)
+    from repro.serve import alignment_service as svc_mod
+    boom = {"armed": True}
+    real_cigar = svc_mod.moves_to_cigar
+
+    def exploding_cigar(moves, n_moves):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected harvest failure")
+        return real_cigar(moves, n_moves)
+
+    monkeypatch.setattr(svc_mod, "moves_to_cigar", exploding_cigar)
+    with pytest.raises(RuntimeError, match="injected"):
+        svc.drain()
+    queued = [r for q in svc.queues.values() for r in q]
+    assert len(queued) == 6                         # full recovery
+    assert svc.inflight == {}
+    assert svc.drain() == 6
+    assert all(r.result is not None for r in reqs)
+
+
+def test_submit_returns_future(rng):
+    svc = AlignmentService(max_len=64, block=4)
+    fut = svc.submit(AlignRequest(rid=0, kernel="global_affine",
+                                  query=rng.integers(0, 4, 20).astype(np.uint8),
+                                  ref=rng.integers(0, 4, 24).astype(np.uint8)))
+    assert not fut.done()
+    res = fut.result()                              # pumps the dispatcher
+    assert fut.done() and res is fut.req.result
+    assert "score" in res and "cigar" in res
+    with pytest.raises(ValueError, match="exceed max_len"):
+        svc.submit(AlignRequest(rid=1, kernel="global_affine",
+                                query=np.zeros(80, np.uint8),
+                                ref=np.zeros(10, np.uint8)))
+
+
+def _mixed_stream(rng, n=24):
+    """Mixed buckets incl. partial batches so coalescing kicks in."""
+    sizes = [12, 14, 40, 50, 20, 60, 30, 35]
+    reqs = []
+    for i in range(n):
+        s = sizes[i % len(sizes)]
+        reqs.append(AlignRequest(
+            rid=i, kernel="global_affine",
+            query=rng.integers(0, 4, s).astype(np.uint8),
+            ref=rng.integers(0, 4, s + 3).astype(np.uint8)))
+    return reqs
+
+
+def _clone(reqs):
+    return [AlignRequest(rid=r.rid, kernel=r.kernel, query=r.query,
+                         ref=r.ref) for r in reqs]
+
+
+def test_sync_vs_pipelined_drain_equivalence(rng):
+    """Pipelined drain returns bit-identical results in the same request
+    order and the same dispatch sequence as the synchronous path,
+    including coalesced batches."""
+    base = _mixed_stream(rng)
+    results, dispatches = {}, {}
+    for depth in (1, 2, 4):
+        svc = AlignmentService(max_len=64, block=4, pipeline_depth=depth)
+        reqs = _clone(base)
+        for r in reqs:
+            svc.submit(r)
+        assert svc.drain() == len(reqs)
+        results[depth] = [r.result for r in reqs]
+        dispatches[depth] = list(svc.dispatches)
+    assert any(d["coalesced"] for d in dispatches[1])
+    for depth in (2, 4):
+        assert results[depth] == results[1]          # bit-identical
+        assert dispatches[depth] == dispatches[1]    # same batch sequence
+
+
+def test_pipelined_drain_after_redispatch_matches_sync(rng):
+    """Equivalence holds across a redispatch: results land once, match
+    the synchronous path, and every request completes."""
+    base = _mixed_stream(rng, n=8)
+    sync = AlignmentService(max_len=64, block=4, pipeline_depth=1)
+    sync_reqs = _clone(base)
+    for r in sync_reqs:
+        sync.submit(r)
+    sync.drain()
+
+    svc = AlignmentService(max_len=64, block=4, pipeline_depth=2,
+                           redispatch_after=5.0)
+    reqs = _clone(base)
+    futs = [svc.submit(r) for r in reqs]
+    # one batch launches on a worker that then goes dead
+    item = svc._next_batch()
+    svc._launch("w_dead", item)
+    svc.monitor._last["w_dead"] = 0.0               # silence its heartbeat
+    assert svc.redispatch_dead(now=100.0) == len(item[2])
+    assert svc.drain(worker="w_ok") == len(reqs)
+    assert all(f.done() for f in futs)
+    assert [r.result for r in reqs] == [r.result for r in sync_reqs]
 
 
 @pytest.mark.slow   # loads a reduced LM

@@ -107,6 +107,34 @@ def test_seed_anchors_masks_padding(rng):
     assert np.all(q[v] <= 64 - 13)        # no anchors from the padded tail
 
 
+def test_top_anchors_exact_order_beyond_2mb():
+    """Anchor sort keys must keep exact (r_pos, q_pos) order over the full
+    int32 coordinate range (regression: the packed int32 key
+    ``r_pos * 1024 + q_pos`` wrapped negative past ~2 Mb references,
+    silently corrupting anchor order — wrong mappings, no error)."""
+    r = jnp.asarray([3_000_000, 10, 2_500_000, 3_000_000, 7], jnp.int32)
+    q = jnp.asarray([5, 3, 7, 2, 9], jnp.int32)
+    v = jnp.asarray([True, True, True, True, False])
+    qo, ro, vo = top_anchors(q, r, v, 5)
+    assert np.asarray(ro)[:4].tolist() == [10, 2_500_000,
+                                           3_000_000, 3_000_000]
+    assert np.asarray(qo)[:4].tolist() == [3, 7, 2, 5]   # q_pos tie-break
+    assert np.asarray(vo).tolist() == [True, True, True, True, False]
+
+
+def test_mapper_places_reads_on_reference_beyond_2mb(rng):
+    """End-to-end guard: reads drawn from past the 2 Mb mark of a large
+    reference must map back to their true origin."""
+    tail = alphabets.random_dna(rng, 4096)
+    ref = np.concatenate([np.zeros(2_200_000, np.uint8), tail])
+    origin = 2_200_000 + 1000
+    read = ref[origin: origin + 150]
+    mapper = ReadMapper(ref)
+    (rec,) = mapper.map_reads([read])
+    assert rec.is_mapped
+    assert abs((rec.pos - 1) - origin) <= 5
+
+
 # ---------------------------------------------------------------------------
 # chaining
 # ---------------------------------------------------------------------------
@@ -239,9 +267,51 @@ def test_read_mapping_service_channel(rng):
     for r in reqs:
         svc.submit(r)
     assert svc.drain() == 10
-    assert len(svc.dispatches) == 3       # 4 + 4 + 2
+    # the whole queue goes to the mapper in one call (the extension stage
+    # pipelines best over the full job list), block=4 only sizes the
+    # mapper's internal batches
+    assert list(svc.dispatches) == [{"n": 10}]
     for i, req in enumerate(reqs):
         assert req.result is not None
         assert req.result["mapped"]
         assert abs((req.result["pos"] - 1) - int(rs.pos[i])) <= 5
         assert req.result["sam"].startswith(f"r{i}\t")
+
+
+def test_read_mapping_service_max_batch_chunks(rng):
+    from repro.serve import MapRequest, ReadMappingService
+    ref = alphabets.random_dna(rng, 8192)
+    rs = sample_reads(ref, 10, 150, error_rate=0.05, seed=11)
+    svc = ReadMappingService(ref, block=4, max_batch=4)
+    for i in range(10):
+        svc.submit(MapRequest(rid=i, read=rs.reads[i, : rs.lens[i]]))
+    assert svc.drain() == 10
+    assert [d["n"] for d in svc.dispatches] == [4, 4, 2]
+
+
+def test_read_mapping_service_requeues_on_failure(rng, monkeypatch):
+    """A raising map_reads must not lose the popped requests."""
+    import pytest
+    from repro.serve import MapRequest, ReadMappingService
+    ref = alphabets.random_dna(rng, 8192)
+    rs = sample_reads(ref, 6, 150, error_rate=0.05, seed=11)
+    svc = ReadMappingService(ref, block=4)
+    reqs = [MapRequest(rid=i, read=rs.reads[i, : rs.lens[i]])
+            for i in range(6)]
+    for r in reqs:
+        svc.submit(r)
+    real = svc.mapper.map_reads
+    boom = {"armed": True}
+
+    def exploding(reads, lens=None, names=None):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected mapper failure")
+        return real(reads, lens, names)
+
+    monkeypatch.setattr(svc.mapper, "map_reads", exploding)
+    with pytest.raises(RuntimeError, match="injected"):
+        svc.drain()
+    assert svc.queue == reqs                  # nothing lost, order kept
+    assert svc.drain() == 6
+    assert all(r.result is not None for r in reqs)

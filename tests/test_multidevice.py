@@ -178,8 +178,12 @@ for i in range(16):
                             ref=rng.integers(0,4,40).astype(np.uint8)))
 n = svc.drain()
 assert n == 16
-from repro.core import align, kernels_zoo
-spec, params = kernels_zoo.make('local_affine')
+# sharded plans live in the shared cache (no private jit in core.batch):
+# the executable's identity includes the mesh placement
+from repro.runtime import plan as plan_mod
+info = plan_mod.plan_cache_info()
+placements = [k.placement for k in info['keys'] if k.placement]
+assert placements == ['data@data=8'], info['keys']
 print('OK', n)
 """)
     assert "OK 16" in out

@@ -73,6 +73,17 @@ def test_same_bucket_reuses_one_plan(rng):
     assert key.bucket_shape == ((64,), (64,))
 
 
+def test_mesh_axis_ignored_for_local_plans(rng):
+    """Without a mesh, mesh_axis must not split the cache."""
+    spec, params = kernels_zoo.make("global_linear")
+    plan_mod.clear_plan_cache()
+    p1 = plan_mod.get_plan(spec, "wavefront", (16,), (16,), batch_size=4)
+    p2 = plan_mod.get_plan(spec, "wavefront", (16,), (16,), batch_size=4,
+                           mesh_axis="x")
+    assert p1 is p2
+    assert plan_mod.plan_cache_info()["size"] == 1
+
+
 def test_distinct_engines_get_distinct_plans(rng):
     import jax.numpy as jnp
     spec, params = kernels_zoo.make("global_linear")
@@ -116,6 +127,61 @@ def test_bucket_length_choices():
     with pytest.raises(ValueError):
         bucket_length(300, max_bucket=256)
     assert bucket_shape(10, 40) == (16, 64)
+
+
+def test_bucket_length_cap_snaps_to_grid():
+    """An off-grid ``max_bucket`` must never become a bucket shape: the
+    cap snaps down to the largest grid bucket and lengths above it raise
+    (regression: ``min(b, max_bucket)`` leaked a 100-wide shape into the
+    plan cache, silently splitting it)."""
+    assert bucket_length(60, max_bucket=100) == 64   # unaffected below cap
+    with pytest.raises(ValueError, match="largest bucket 64"):
+        bucket_length(80, max_bucket=100)            # pre-fix: returned 100
+    with pytest.raises(ValueError):
+        bucket_length(100, max_bucket=100)
+    # on-grid caps behave exactly as before
+    assert bucket_length(200, max_bucket=256) == 256
+    assert bucket_shape(10, 60, max_bucket=100) == (16, 64)
+    with pytest.raises(ValueError):
+        pack_by_bucket([(80, 10)], max_bucket=100)
+    with pytest.raises(ValueError, match="below min_bucket"):
+        bucket_length(5, min_bucket=16, max_bucket=10)
+
+
+def test_run_pairs_pipelined_matches_sync(rng):
+    """Pipelined packed dispatch returns bit-identical results in input
+    order for every depth."""
+    from repro.runtime import run_pairs
+    spec, params = kernels_zoo.make("global_affine")
+    pairs = [(rng.integers(0, 4, int(rng.integers(10, 90))).astype(np.uint8),
+              rng.integers(0, 4, int(rng.integers(10, 90))).astype(np.uint8))
+             for _ in range(13)]
+    outs = {d: run_pairs(spec, params, pairs, block=4, pipeline_depth=d)
+            for d in (1, 2, 4)}
+    for d in (2, 4):
+        for a, b in zip(outs[d], outs[1]):
+            assert float(a.score) == float(b.score)
+            np.testing.assert_array_equal(a.moves, b.moves)
+            assert int(a.n_moves) == int(b.n_moves)
+
+
+def test_run_pipelined_depth_and_abandon():
+    from repro.runtime import run_pipelined
+    events = []
+    total = run_pipelined(
+        range(4), lambda i: i * 10,
+        lambda i, out: events.append(("h", i, out)) or 1, depth=2)
+    assert total == 4
+    assert events == [("h", 0, 0), ("h", 1, 10), ("h", 2, 20), ("h", 3, 30)]
+    abandoned = []
+    with pytest.raises(RuntimeError):
+        run_pipelined(
+            range(4), lambda i: i,
+            lambda i, out: (_ for _ in ()).throw(RuntimeError("boom")),
+            depth=3, on_abandon=lambda i, out: abandoned.append(i))
+    assert abandoned == [1, 2]        # launched-but-unharvested window
+    with pytest.raises(ValueError, match="depth"):
+        run_pipelined([], lambda i: i, lambda i, o: None, depth=0)
 
 
 def test_pad_to_bucket_roundtrip(rng):
