@@ -97,6 +97,9 @@ def run(quick: bool = False):
     emit("bucketing/bucketed", t_bucket / n,
          f"stream_s={t_bucket:.3f} buckets={shapes} "
          f"speedup={t_global / t_bucket:.2f}x")
+    return {"n_requests": n, "stream_s_global_pad": t_global,
+            "stream_s_bucketed": t_bucket, "buckets": shapes,
+            "speedup": t_global / t_bucket}
 
 
 if __name__ == "__main__":

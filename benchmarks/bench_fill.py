@@ -1,0 +1,203 @@
+"""Matrix-fill GCUPS: the strip-mined / bit-packed / batched-early-exit
+hot path vs the unpacked K=1 seed schedule.
+
+Measures GCUPS (cell updates per second over the *actual* ``q_len *
+r_len`` cells, not the padded bucket) per engine x bucket x batch for
+the full align path (fill + traceback):
+
+* ``seed`` — the PR-3 executable: ``jit(vmap(align_impl))`` with
+  ``strip=1, tb_pack=1`` and the fill forced to walk every bucket
+  diagonal (``live_bound = 2 * bucket``) — one scan step per
+  anti-diagonal, one byte per pointer, per-row ``while_loop`` traceback;
+* ``opt``  — the shared-plan default: backend-resolved strip, pointers
+  packed ``spec.tb_pack`` per byte, the fill exiting at the block's
+  ``max(q_len + r_len)`` bound, and the batched early-exit traceback
+  (``traceback.run_batched``).
+
+Request lengths are drawn uniformly from ``(bucket/2, bucket]`` — the
+distribution power-of-two bucketing guarantees — and batched cells
+measure a whole sorted stream (several blocks, longest-first, exactly
+the blocks ``bucketing.pack_by_bucket`` / the service queue now form),
+so the early-exit saving measured here is the steady-state serving
+saving, not a best-case.  Every (engine, bucket, batch) cell asserts
+the two paths produce bit-identical ``(score, start, end, moves,
+n_moves)`` before timing — the parity gate tier-1 runs via ``--quick``.
+
+The second headline is the serving-memory claim: at a large bucket the
+per-alignment traceback bytes (``runtime.plan.traceback_bytes``) set how
+many alignments a fixed HBM budget keeps in flight; bit-packing cuts the
+bytes by ``tb_pack`` (4x for 2-bit kernels, 2x for affine) and raises
+the max in-flight batch by the same factor — the same estimator
+``serve.AlignmentService`` uses for ``tb_budget_bytes`` block sizing.
+"""
+from __future__ import annotations
+
+import functools
+import json
+
+import jax
+import numpy as np
+
+from repro.core import kernels_zoo
+from repro.runtime import plan as plan_mod
+from repro.runtime import registry
+
+from .common import emit, kernel_batch
+
+MEM_BUDGET = 256 << 20          # fixed traceback-memory budget (bytes)
+MEM_BUCKET = 4096               # bucket for the in-flight batch headline
+
+
+def _seed_fn(spec, engine_name, bucket):
+    """The seed executable: vmapped fill + while-loop traceback at
+    strip=1, tb_pack=1, full-bucket fill (exactly the PR-3 path)."""
+    engine_fn = registry.get_engine(engine_name)
+    sup = registry.engine_options(engine_name)
+    opts = {}
+    if "strip" in sup:
+        opts["strip"] = 1
+    if "tb_pack" in sup:
+        opts["tb_pack"] = 1
+    if sup.get("live_bound") == "dynamic":
+        opts["live_bound"] = 2 * bucket      # no early exit in the seed
+    if opts:
+        engine_fn = functools.partial(engine_fn, **opts)
+    single = functools.partial(plan_mod.align_impl, spec, engine_fn)
+    return jax.jit(jax.vmap(single, in_axes=(None, 0, 0, 0, 0)))
+
+
+def _assert_bit_identical(a, b, ctx):
+    for f in ("score", "end_i", "end_j", "start_i", "start_j",
+              "n_moves", "moves"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{ctx}: {f}")
+
+
+def _stream_blocks(rng, spec, bucket, n, n_blocks):
+    """``n_blocks`` length-sorted blocks of ``n`` pairs each, lengths in
+    the (bucket/2, bucket] range bucketing guarantees (longest block
+    first — the order the sorted bucket queue dispatches)."""
+    total = n * n_blocks
+    qs, rs, _, _ = kernel_batch(rng, spec, total, bucket, bucket)
+    ql = np.asarray(rng.integers(bucket // 2 + 1, bucket + 1, total),
+                    np.int32)
+    rl = np.asarray(rng.integers(bucket // 2 + 1, bucket + 1, total),
+                    np.int32)
+    order = np.argsort(-(ql.astype(np.int64) + rl), kind="stable")
+    blocks = []
+    for k in range(n_blocks):
+        sel = order[k * n:(k + 1) * n]
+        blocks.append((qs[sel], rs[sel], ql[sel], rl[sel]))
+    return blocks
+
+
+def _stream_time(fn, params, blocks, iters):
+    """Wall seconds for one pass over every block (min over iters)."""
+    import time
+
+    def once():
+        outs = [fn(params, *b) for b in blocks]
+        jax.block_until_ready(outs)
+
+    once()                                 # warm / compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        once()
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    kernel = "global_affine"
+    spec, params = kernels_zoo.make(kernel)
+    engines = ["wavefront"] if quick else ["wavefront", "pallas_interpret"]
+    buckets = [64, 128] if quick else [64, 128, 256, 512]
+    batches = [8] if quick else [1, 8]
+    iters = 3 if quick else 7
+
+    metrics = {"kernel": kernel, "cells": [], "mem": {}}
+    best_small = 0.0
+    for engine in engines:
+        if engine == "pallas_interpret":
+            # interpret mode is a correctness vehicle, not a perf one:
+            # parity-check the smallest cell only
+            buckets_e, batches_e, time_it = [buckets[0]], [batches[-1]], False
+        else:
+            buckets_e, batches_e, time_it = buckets, batches, True
+        for bucket in buckets_e:
+            seed = _seed_fn(spec, engine, bucket)
+            for n in batches_e:
+                n_blocks = 2 if (quick or not time_it) else 8
+                blocks = _stream_blocks(rng, spec, bucket, n, n_blocks)
+                cells = sum(int((ql.astype(np.int64) * rl).sum())
+                            for _, _, ql, rl in blocks)
+                opt = plan_mod.get_plan(spec, engine, (bucket,), (bucket,),
+                                        batch_size=n)
+                for blk in blocks:
+                    a = seed(params, *blk)
+                    b = opt(params, *blk)
+                    _assert_bit_identical(a, b, f"{engine}/b{bucket}/n{n}")
+                if not time_it:
+                    emit(f"fill/{engine}/b{bucket}/n{n}", 0.0, "parity-only")
+                    continue
+                t_seed = _stream_time(seed, params, blocks, iters)
+                t_opt = _stream_time(opt, params, blocks, iters)
+                cell = {"engine": engine, "bucket": bucket, "batch": n,
+                        "gcups_seed": cells / t_seed / 1e9,
+                        "gcups_opt": cells / t_opt / 1e9,
+                        "speedup": t_seed / t_opt,
+                        "strip": opt.key.strip, "tb_pack": opt.key.tb_pack}
+                metrics["cells"].append(cell)
+                if bucket <= 512:
+                    best_small = max(best_small, cell["speedup"])
+                emit(f"fill/{engine}/b{bucket}/n{n}",
+                     t_opt / (n * n_blocks),
+                     f"gcups={cell['gcups_opt']:.3f} "
+                     f"seed_gcups={cell['gcups_seed']:.3f} "
+                     f"speedup={cell['speedup']:.2f}x "
+                     f"strip={cell['strip']} pack={cell['tb_pack']}")
+
+    # -- serving-memory headline: max in-flight batch at a fixed budget ----
+    for mem_kernel in ("global_linear", kernel):
+        mspec, _ = kernels_zoo.make(mem_kernel)
+        per_seed = plan_mod.traceback_bytes(mspec, MEM_BUCKET, MEM_BUCKET,
+                                            strip=1, tb_pack=1)
+        per_opt = plan_mod.traceback_bytes(mspec, MEM_BUCKET, MEM_BUCKET)
+        batch_seed = MEM_BUDGET // per_seed
+        batch_opt = MEM_BUDGET // per_opt
+        metrics["mem"][mem_kernel] = {
+            "bucket": MEM_BUCKET, "budget_bytes": MEM_BUDGET,
+            "tb_bytes_seed": per_seed, "tb_bytes_opt": per_opt,
+            "max_batch_seed": batch_seed, "max_batch_opt": batch_opt,
+            "batch_ratio": batch_opt / max(batch_seed, 1)}
+        emit(f"fill/mem_budget/{mem_kernel}/b{MEM_BUCKET}", 0.0,
+             f"tb_bytes {per_seed}->{per_opt} max_batch "
+             f"{batch_seed}->{batch_opt} "
+             f"({metrics['mem'][mem_kernel]['batch_ratio']:.1f}x)")
+
+    metrics["best_speedup_bucket_le_512"] = best_small
+    assert metrics["mem"]["global_linear"]["batch_ratio"] >= 2.0, \
+        metrics["mem"]
+    return metrics
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write headline metrics to OUT (JSON)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    metrics = run(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench_fill": metrics}, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

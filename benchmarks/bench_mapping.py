@@ -65,6 +65,9 @@ def run(quick: bool = False):
     emit("mapping/brute_force_dp", t_bf,
          f"reads_per_s={1.0 / t_bf:.2f} measured_on={m} "
          f"speedup={t_bf / per_read:.1f}x")
+    return {"reads_per_s": 1.0 / per_read, "accuracy": acc,
+            "n_reads": n_reads, "ref_len": ref_len,
+            "speedup_vs_brute_force": t_bf / per_read}
 
 
 if __name__ == "__main__":

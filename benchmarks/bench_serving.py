@@ -96,6 +96,9 @@ def run(quick: bool = False):
     emit("serving/pipelined_drain", t_pipe / n,
          f"stream_s={t_pipe:.3f} speedup={t_sync / t_pipe:.2f}x "
          f"identical={identical}")
+    return {"n_requests": n, "stream_s_sync": t_sync,
+            "stream_s_pipelined": t_pipe, "speedup": t_sync / t_pipe,
+            "identical": identical}
 
 
 if __name__ == "__main__":

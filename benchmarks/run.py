@@ -2,17 +2,21 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
 stderr-free stdout comments).  ``--quick`` shrinks sizes for CI.
+``--json out.json`` additionally dumps each suite's headline metrics
+(whatever dict its ``run()`` returns) — the perf-trajectory artifact
+(e.g. the committed ``BENCH_fill.json`` baseline).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
 from . import (bench_kernels_table2, bench_scaling_fig3,
                bench_vs_handcoded_fig45, bench_vs_software_fig6,
                bench_vs_naive_hls, bench_tiling, bench_bucketing,
-               bench_mapping, bench_serving)
+               bench_mapping, bench_serving, bench_fill)
 
 SUITES = [
     ("Table 2 (15 kernels)", bench_kernels_table2),
@@ -24,6 +28,7 @@ SUITES = [
     ("Bucketed batching (runtime)", bench_bucketing),
     ("Read mapping (seed-and-extend)", bench_mapping),
     ("Serving (sync vs pipelined drain)", bench_serving),
+    ("Fill (strip-mined + packed tb)", bench_fill),
 ]
 
 
@@ -31,18 +36,27 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="dump each suite's headline metrics to OUT")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
+    metrics: dict = {}
     for title, mod in SUITES:
         if args.only and args.only not in mod.__name__:
             continue
         print(f"# --- {title} ---", flush=True)
         try:
-            mod.run(quick=args.quick)
+            out = mod.run(quick=args.quick)
+            if isinstance(out, dict):
+                metrics[mod.__name__.rsplit(".", 1)[-1]] = out
         except Exception:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -13,3 +13,4 @@ python -m pytest -x -q "$@"
 python -m benchmarks.run --quick --only bucketing
 python -m benchmarks.run --quick --only mapping
 python -m benchmarks.run --quick --only serving
+python -m benchmarks.run --quick --only fill   # packed/strip parity gate

@@ -23,10 +23,11 @@ from . import types as T
 
 def align_batch(spec: T.DPKernelSpec, params, queries, refs,
                 q_lens=None, r_lens=None, engine_name: str = "wavefront",
-                with_traceback: bool = True):
+                with_traceback: bool = True, strip=None, tb_pack=None):
     """vmap one kernel over the leading (pair) axis.  queries: (N, Lq,
     *char), refs: (N, Lr, *char); q_lens/r_lens: (N,) effective lengths
-    (None = full)."""
+    (None = full).  ``strip``/``tb_pack`` select the engine schedule
+    (None = the strip-mined, bit-packed defaults)."""
     n = queries.shape[0]
     if q_lens is None:
         q_lens = jnp.full((n,), queries.shape[1], jnp.int32)
@@ -34,13 +35,20 @@ def align_batch(spec: T.DPKernelSpec, params, queries, refs,
         r_lens = jnp.full((n,), refs.shape[1], jnp.int32)
     if plan_mod.is_traced(params, queries, refs, q_lens, r_lens):
         engine_fn = registry.get_engine(engine_name)
+        # honor explicit schedule knobs on the inlined path too
+        sup = registry.engine_options(engine_name)
+        knobs = {k: v for k, v in (("strip", strip), ("tb_pack", tb_pack))
+                 if v is not None and k in sup}
+        if knobs:
+            engine_fn = functools.partial(engine_fn, **knobs)
         fn = functools.partial(plan_mod.align_impl, spec, engine_fn,
                                with_traceback=with_traceback)
         return jax.vmap(fn, in_axes=(None, 0, 0, 0, 0))(
             params, queries, refs, q_lens, r_lens)
     plan = plan_mod.get_plan(spec, engine_name, queries.shape[1:],
                              refs.shape[1:], batch_size=n,
-                             with_traceback=with_traceback)
+                             with_traceback=with_traceback,
+                             strip=strip, tb_pack=tb_pack)
     return plan(params, queries, refs, q_lens, r_lens)
 
 

@@ -2,8 +2,13 @@
 
 This is the JAX analogue of the DP-HLS back-end (§5.1):
 
-  * the scan over anti-diagonals is the ``#pragma HLS PIPELINE`` wavefront
-    loop (one scan step per wavefront),
+  * the loop over anti-diagonals is the ``#pragma HLS PIPELINE`` wavefront
+    loop — *strip-mined*: each step evaluates ``strip`` consecutive
+    anti-diagonals with the inner loop unrolled (the canonical
+    strip-mine-and-unroll pipeline transform, iteration count
+    ⌈(Q+R)/strip⌉), and *early-exiting*: the loop stops at the
+    ``q_len + r_len`` wavefront (or the caller's shared ``live_bound``),
+    so a pair padded into a 2x bucket never pays the padded cost,
   * the lane dimension (vector of Q+1 cells) is the unrolled PE array
     (``#pragma HLS UNROLL``) — on TPU these become VPU lanes,
   * the two carried diagonal buffers are the fully-partitioned DP memory
@@ -11,24 +16,65 @@ This is the JAX analogue of the DP-HLS back-end (§5.1):
   * the reference sequence *streams* through the lane vector one position
     per wavefront, exactly like characters streaming through the systolic
     array (optimizations (c)/(d)),
-  * traceback pointers are emitted one contiguous row per wavefront — the
-    address-coalesced traceback memory of §5.2,
+  * traceback pointers are emitted one contiguous row per wavefront and
+    the store is bit-packed ``tb_pack`` pointers per byte along the lane
+    axis (the address-coalesced traceback memory of §5.2 at the kernel's
+    declared ``ptr_bits`` width — a 4x cut in persistent tb memory for
+    2-bit FSMs),
   * the masked running best + final reduction is §5.2's per-PE local max
-    and reduction tree.
+    and reduction tree (corner-region kernels capture their single
+    objective cell directly instead of reducing every wavefront).
 
 The user-facing surface is only ``spec.pe`` / ``spec.init_*`` — the engine
 body never changes per kernel (the paper's front-end/back-end separation).
+``strip=1, tb_pack=1, live_bound=Q+R`` reproduces the seed schedule bit
+for bit.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import types as T
 from .spec_utils import band_mask, region_mask
+from .traceback import pack_lanes
 
 
-def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None) -> T.DPResult:
+# Per-backend default for anti-diagonals per loop step — the single
+# source of truth (runtime.registry registers this same dict as the
+# wavefront engine's 'strip' option default).  On accelerators the
+# sequential loop pays a per-step dispatch the strip amortizes (the
+# paper's pipelined wavefront loop); XLA:CPU compiles the unrolled body
+# to measurably *worse* code (the fill is memory-bound on the lane
+# buffers and bigger loop bodies defeat its fusion), so the CPU default
+# keeps the seed schedule.
+STRIP_DEFAULTS = {"cpu": 1, "default": 8}
+
+
+def default_strip() -> int:
+    """``STRIP_DEFAULTS`` resolved against the active backend."""
+    return STRIP_DEFAULTS.get(jax.default_backend(),
+                              STRIP_DEFAULTS["default"])
+
+
+def resolve_tb_pack(spec: T.DPKernelSpec, tb_pack: Optional[int]) -> int:
+    """Validate/resolve a pointers-per-byte request against the kernel's
+    declared pointer width (``None`` -> the spec's natural packing)."""
+    pack = spec.tb_pack if tb_pack is None else int(tb_pack)
+    if pack not in (1, 2, 4, 8):
+        raise ValueError(f"tb_pack must be 1, 2, 4 or 8, got {pack}")
+    if spec.traceback is not None and 8 // pack < spec.ptr_bits:
+        raise ValueError(
+            f"tb_pack={pack} leaves {8 // pack}-bit slots but kernel "
+            f"{spec.name} declares ptr_bits={spec.ptr_bits}")
+    return pack
+
+
+def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
+        *, strip: Optional[int] = None, tb_pack: Optional[int] = None,
+        live_bound=None) -> T.DPResult:
     Q = query.shape[0]
     R = ref.shape[0]
     L = spec.n_layers
@@ -37,6 +83,10 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None) -> T.D
     q_len = jnp.asarray(Q if q_len is None else q_len, jnp.int32)
     r_len = jnp.asarray(R if r_len is None else r_len, jnp.int32)
     with_tb = spec.traceback is not None
+    strip = default_strip() if strip is None else int(strip)
+    if strip < 1:
+        raise ValueError(f"strip must be >= 1, got {strip}")
+    pack = resolve_tb_pack(spec, tb_pack)
 
     lanes = Q + 1
     i_idx = jnp.arange(lanes, dtype=jnp.int32)
@@ -58,7 +108,8 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None) -> T.D
 
     vpe = jax.vmap(spec.pe, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))
 
-    def body(carry, d):
+    def step(carry, d):
+        """One anti-diagonal — the seed schedule, unchanged."""
         prev2, prev, r_stream, best, bi, bj = carry
         # stream one reference char into lane 0
         new_char = jax.lax.dynamic_index_in_dim(
@@ -85,24 +136,88 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None) -> T.D
         newbuf = jnp.where(on_col0[:, None], col0, newbuf)
 
         # §5.2 local-max bookkeeping over the objective region.
-        rmask = region_mask(spec, i_idx, j, q_len, r_len)
-        cand = jnp.where(rmask, newbuf[:, spec.primary_layer], sent)
-        lane_best = spec.reduce_best(cand)
-        lane_arg = spec.arg_best(cand).astype(jnp.int32)
-        upd = spec.better(lane_best, best)
-        best = jnp.where(upd, lane_best, best)
-        bi = jnp.where(upd, lane_arg, bi)
-        bj = jnp.where(upd, d - lane_arg, bj)
+        if spec.region == T.REGION_CORNER:
+            # the region is the single cell (q_len, r_len) on diagonal
+            # q_len + r_len: capture it directly instead of reducing +
+            # arg-reducing the whole lane vector every step (bit-
+            # identical — the masked reduction could only ever fire
+            # there, and newbuf already carries the validity masking)
+            cell = jax.lax.dynamic_index_in_dim(
+                newbuf, jnp.clip(q_len, 0, lanes - 1), 0,
+                keepdims=False)[spec.primary_layer]
+            upd = (d == q_len + r_len) & (q_len >= 1) & (r_len >= 1) & \
+                spec.better(cell, best)
+            best = jnp.where(upd, cell, best)
+            bi = jnp.where(upd, q_len, bi)
+            bj = jnp.where(upd, r_len, bj)
+        else:
+            rmask = region_mask(spec, i_idx, j, q_len, r_len)
+            cand = jnp.where(rmask, newbuf[:, spec.primary_layer], sent)
+            lane_best = spec.reduce_best(cand)
+            lane_arg = spec.arg_best(cand).astype(jnp.int32)
+            upd = spec.better(lane_best, best)
+            best = jnp.where(upd, lane_best, best)
+            bi = jnp.where(upd, lane_arg, bi)
+            bj = jnp.where(upd, d - lane_arg, bj)
 
         tb_row = jnp.where(valid, ptr, jnp.uint8(0)) if with_tb else None
         return (prev, newbuf, r_stream, best, bi, bj), tb_row
+
+    def body(carry, d0):
+        # strip-mined: 'strip' consecutive anti-diagonals per scan step,
+        # unrolled so XLA fuses their PE evaluations into one dispatch
+        rows = []
+        for k in range(strip):
+            carry, tb_row = step(carry, d0 + k)
+            if with_tb:
+                rows.append(tb_row)
+        return carry, (jnp.stack(rows) if with_tb else None)
 
     # d = 0 buffer: only lane 0 (cell (0,0)) is defined.
     buf_d0 = jnp.full((lanes, L), sent, dt)
     buf_d0 = buf_d0.at[0].set(jnp.where(band_mask(spec, 0, 0), row0[0], sent))
     buf_dm1 = jnp.full((lanes, L), sent, dt)
 
+    n_steps = -(-(Q + R) // strip)
+    # Early-exit bound: diagonals beyond q_len + r_len hold no live cell
+    # (every mask requires i <= q_len, j <= r_len, so d = i + j is
+    # bounded) — a 40-base pair padded into a 64-bucket stops after 80
+    # wavefronts, not 128.  Untouched trailing tb rows stay zero, exactly
+    # what the masked store would have written.  A batched caller passes
+    # ``live_bound = max(q_lens + r_lens)`` with vmap ``in_axes=None``:
+    # the loop counter then stays unbatched, the whole block exits at the
+    # batch-max bound, and the tb write keeps its scalar (in-place)
+    # start index — a per-row bound would turn it into a scatter that
+    # copies the store every step.
+    if live_bound is None:
+        live_bound = q_len + r_len
+    live_steps = jnp.minimum(
+        (jnp.asarray(live_bound, jnp.int32) + strip - 1) // strip,
+        jnp.int32(n_steps))
+    tb0 = jnp.zeros((n_steps * strip, lanes), jnp.uint8) if with_tb else None
+
+    def cond(state):
+        s = state[0]
+        return s < live_steps
+
+    def wbody(state):
+        s, carry, tb_buf = state
+        carry, rows = body(carry, s * strip + 1)
+        if with_tb:
+            tb_buf = jax.lax.dynamic_update_slice(
+                tb_buf, rows, (s * strip, jnp.int32(0)))
+        return s + 1, carry, tb_buf
+
     carry0 = (buf_dm1, buf_d0, r_diag0, sent, jnp.int32(0), jnp.int32(0))
-    ds = jnp.arange(1, Q + R + 1, dtype=jnp.int32)
-    (_, _, _, best, bi, bj), tb = jax.lax.scan(body, carry0, ds)
-    return T.DPResult(score=best, end_i=bi, end_j=bj, tb=tb, tb_layout="diag")
+    _, (_, _, _, best, bi, bj), tb = jax.lax.while_loop(
+        cond, wbody, (jnp.int32(0), carry0, tb0))
+    layout = "diag" if pack == 1 else ("diag", pack)
+    if with_tb:
+        # one bulk packing pass over the whole store, not one per scan
+        # step: keeps the loop body lean (XLA:CPU codegen degrades with
+        # extra per-step ops) while the *persistent* artifact — what the
+        # serving path holds in flight per alignment — shrinks by pack.
+        # The Pallas kernel packs in-VMEM before its HBM store instead,
+        # which is where in-fill packing actually saves traffic.
+        tb = pack_lanes(tb, pack)
+    return T.DPResult(score=best, end_i=bi, end_j=bj, tb=tb, tb_layout=layout)

@@ -13,14 +13,17 @@ from .. import types as T
 
 # Linear-gap pointer encoding (2 bits, paper front-end step 1.5).
 P_END, P_DIAG, P_UP, P_LEFT = 0, 1, 2, 3
+LINEAR_PTR_BITS = 2        # back-ends pack 4 pointers per traceback byte
 
 # Affine pointer byte: bits 0-1 = H source, bit 2 = I-extend, bit 3 = D-extend
 # (4 bits, as the paper notes for kernel #2).  END must be 0 so that the
 # never-written boundary/invalid cells read back as path terminators.
 A_END, A_DIAG, A_UP, A_LEFT = 0, 1, 2, 3
+AFFINE_PTR_BITS = 4        # back-ends pack 2 pointers per traceback byte
 # Two-piece pointer byte: bits 0-2 = H source, bits 3-6 = I1/D1/I2/D2 extend
-# (7 bits, as the paper notes for kernels #5/#13).
+# (7 bits, as the paper notes for kernels #5/#13 — no packing possible).
 TP_END, TP_DIAG, TP_UP1, TP_LEFT1, TP_UP2, TP_LEFT2 = 0, 1, 2, 3, 4, 5
+TWO_PIECE_PTR_BITS = 7
 
 ST_MM, ST_INS, ST_DEL, ST_INS2, ST_DEL2 = 0, 1, 2, 3, 4
 

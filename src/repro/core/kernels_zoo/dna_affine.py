@@ -21,7 +21,7 @@ def global_affine(**kw) -> T.DPKernelSpec:
         pe=C.affine_pe(C.dna_sub),
         init_row=C.affine_init_row, init_col=C.affine_init_col,
         region=T.REGION_CORNER,
-        traceback=C.affine_tb(T.STOP_ORIGIN), **kw)
+        traceback=C.affine_tb(T.STOP_ORIGIN), ptr_bits=C.AFFINE_PTR_BITS, **kw)
 
 
 def _local_zero_init(params, k):
@@ -37,7 +37,7 @@ def local_affine(**kw) -> T.DPKernelSpec:
         pe=C.affine_pe(C.dna_sub, local=True),
         init_row=_local_zero_init, init_col=_local_zero_init,
         region=T.REGION_ALL,
-        traceback=C.affine_tb(T.STOP_PTR_END), **kw)
+        traceback=C.affine_tb(T.STOP_PTR_END), ptr_bits=C.AFFINE_PTR_BITS, **kw)
 
 
 def banded_local_affine(band: int = 16, **kw) -> T.DPKernelSpec:

@@ -24,7 +24,7 @@ def global_linear(**kw) -> T.DPKernelSpec:
         pe=C.linear_pe(C.dna_sub),
         init_row=C.linear_gap_init, init_col=C.linear_gap_init,
         region=T.REGION_CORNER,
-        traceback=C.linear_tb(T.STOP_ORIGIN), **kw)
+        traceback=C.linear_tb(T.STOP_ORIGIN), ptr_bits=C.LINEAR_PTR_BITS, **kw)
 
 
 def local_linear(**kw) -> T.DPKernelSpec:
@@ -34,7 +34,7 @@ def local_linear(**kw) -> T.DPKernelSpec:
         pe=C.linear_pe(C.dna_sub, local=True),
         init_row=C.zeros_init(1), init_col=C.zeros_init(1),
         region=T.REGION_ALL,
-        traceback=C.linear_tb(T.STOP_PTR_END), **kw)
+        traceback=C.linear_tb(T.STOP_PTR_END), ptr_bits=C.LINEAR_PTR_BITS, **kw)
 
 
 def overlap(**kw) -> T.DPKernelSpec:
@@ -44,7 +44,7 @@ def overlap(**kw) -> T.DPKernelSpec:
         pe=C.linear_pe(C.dna_sub),
         init_row=C.zeros_init(1), init_col=C.zeros_init(1),
         region=T.REGION_LAST_ROW_COL,
-        traceback=C.linear_tb(T.STOP_EDGE), **kw)
+        traceback=C.linear_tb(T.STOP_EDGE), ptr_bits=C.LINEAR_PTR_BITS, **kw)
 
 
 def semiglobal(**kw) -> T.DPKernelSpec:
@@ -54,7 +54,7 @@ def semiglobal(**kw) -> T.DPKernelSpec:
         pe=C.linear_pe(C.dna_sub),
         init_row=C.zeros_init(1), init_col=C.linear_gap_init,
         region=T.REGION_LAST_ROW,
-        traceback=C.linear_tb(T.STOP_TOP_ROW), **kw)
+        traceback=C.linear_tb(T.STOP_TOP_ROW), ptr_bits=C.LINEAR_PTR_BITS, **kw)
 
 
 def banded_global_linear(band: int = 16, **kw) -> T.DPKernelSpec:
@@ -64,4 +64,4 @@ def banded_global_linear(band: int = 16, **kw) -> T.DPKernelSpec:
         pe=C.linear_pe(C.dna_sub),
         init_row=C.linear_gap_init, init_col=C.linear_gap_init,
         region=T.REGION_CORNER, band=band,
-        traceback=C.linear_tb(T.STOP_ORIGIN), **kw)
+        traceback=C.linear_tb(T.STOP_ORIGIN), ptr_bits=C.LINEAR_PTR_BITS, **kw)

@@ -25,7 +25,8 @@ def global_two_piece(**kw) -> T.DPKernelSpec:
         pe=C.two_piece_pe(C.dna_sub),
         init_row=C.two_piece_init_row, init_col=C.two_piece_init_col,
         region=T.REGION_CORNER,
-        traceback=C.two_piece_tb(T.STOP_ORIGIN), **kw)
+        traceback=C.two_piece_tb(T.STOP_ORIGIN),
+        ptr_bits=C.TWO_PIECE_PTR_BITS, **kw)
 
 
 def banded_global_two_piece(band: int = 16, **kw) -> T.DPKernelSpec:
@@ -35,4 +36,5 @@ def banded_global_two_piece(band: int = 16, **kw) -> T.DPKernelSpec:
         pe=C.two_piece_pe(C.dna_sub),
         init_row=C.two_piece_init_row, init_col=C.two_piece_init_col,
         region=T.REGION_CORNER, band=band,
-        traceback=C.two_piece_tb(T.STOP_ORIGIN), **kw)
+        traceback=C.two_piece_tb(T.STOP_ORIGIN),
+        ptr_bits=C.TWO_PIECE_PTR_BITS, **kw)

@@ -48,7 +48,7 @@ def dtw(**kw) -> T.DPKernelSpec:
         init_col=_corner_zero_init(jnp.float32),
         objective="min", region=T.REGION_CORNER,
         score_dtype=jnp.float32, char_shape=(2,), char_dtype=jnp.float32,
-        traceback=C.linear_tb(T.STOP_ORIGIN), **kw)
+        traceback=C.linear_tb(T.STOP_ORIGIN), ptr_bits=C.LINEAR_PTR_BITS, **kw)
 
 
 def default_dtw_params():

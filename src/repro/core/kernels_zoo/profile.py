@@ -37,7 +37,7 @@ def profile(**kw) -> T.DPKernelSpec:
         init_row=_gap_init, init_col=_gap_init,
         region=T.REGION_CORNER,
         score_dtype=jnp.float32, char_shape=(5,), char_dtype=jnp.float32,
-        traceback=C.linear_tb(T.STOP_ORIGIN), **kw)
+        traceback=C.linear_tb(T.STOP_ORIGIN), ptr_bits=C.LINEAR_PTR_BITS, **kw)
 
 
 def make_profile(rng: np.random.Generator, n: int, n_seqs: int = 8) -> np.ndarray:

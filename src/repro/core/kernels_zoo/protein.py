@@ -51,4 +51,4 @@ def protein_local(**kw) -> T.DPKernelSpec:
         pe=C.linear_pe(C.matrix_sub, local=True),
         init_row=C.zeros_init(1), init_col=C.zeros_init(1),
         region=T.REGION_ALL,
-        traceback=C.linear_tb(T.STOP_PTR_END), **kw)
+        traceback=C.linear_tb(T.STOP_PTR_END), ptr_bits=C.LINEAR_PTR_BITS, **kw)

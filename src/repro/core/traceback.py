@@ -1,32 +1,86 @@
 """FSM traceback executor (paper §5.2, Listings 3/7).
 
-The matrix fill stores one pointer byte per cell; traceback is a pointer
-chase driven by the kernel's FSM: ``(state, ptr) -> (move, next_state)``.
-Runs as a ``lax.while_loop`` over at most Q+R steps; vmap-able.
+The matrix fill stores traceback pointers — packed ``pack`` per byte
+along the lane axis when the kernel declares a narrow ``ptr_bits`` —
+and traceback is a pointer chase driven by the kernel's FSM:
+``(state, ptr) -> (move, next_state)``.  ``run`` walks one alignment
+with a ``lax.while_loop``; ``run_batched`` walks a whole block with one
+loop over an active mask that exits as soon as every row has hit its
+stop cell (instead of paying the worst-case step count per row).
 
 Pointer stores are layout-dependent:
-  * 'diag' (wavefront engines): tb[(i+j) - 1, i]   (coalesced, §5.2)
-  * 'row'  (reference engine):  tb[i, j]
+  * 'diag'  (wavefront engine):  tb[(i+j) - 1, i]   (coalesced, §5.2)
+  * 'row'   (reference engine):  tb[i, j]
+  * ('chunk', n_pe) (Pallas kernel): tb[chunk, lane, w], strip height
+    n_pe, lane = (i-1) % n_pe, chunk-local wavefront w = lane + j - 1.
+A lane-packed store appends the pack factor — ('diag', pack) /
+('chunk', n_pe, pack): ``pack`` pointers share one byte along the lane
+axis, each in a slot of 8 // pack bits (lane i lives in byte i // pack,
+slot i % pack).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import types as T
 
 
+class TracebackTruncated(RuntimeError):
+    """The traceback walk ran out of its ``max_len`` step budget before
+    reaching a stop cell — the recorded path is a corrupt prefix."""
+
+
+def pack_lanes(ptr, pack: int):
+    """Pack pointers along the last axis: ``(..., lanes)`` small ints ->
+    ``(..., ceil(lanes / pack))`` uint8, ``pack`` slots of 8 // pack bits
+    per byte (slot s = lane ``base + s``).  ``pack=1`` is a cast."""
+    ptr = jnp.asarray(ptr)
+    if pack == 1:
+        return ptr.astype(jnp.uint8)
+    if pack not in (2, 4, 8):
+        raise ValueError(f"pack must be 1, 2, 4 or 8, got {pack}")
+    width = 8 // pack
+    lanes = ptr.shape[-1]
+    padded = -(-lanes // pack) * pack
+    if padded != lanes:
+        ptr = jnp.concatenate(
+            [ptr, jnp.zeros(ptr.shape[:-1] + (padded - lanes,), ptr.dtype)],
+            axis=-1)
+    slots = ptr.reshape(ptr.shape[:-1] + (padded // pack, pack))
+    slots = slots.astype(jnp.int32) & ((1 << width) - 1)
+    acc = jnp.zeros(slots.shape[:-1], jnp.int32)
+    for s in range(pack):
+        acc = acc | (slots[..., s] << (s * width))
+    return acc.astype(jnp.uint8)
+
+
+def _unpack(byte, slot, pack: int):
+    width = 8 // pack
+    return (byte >> (slot * width)).astype(jnp.int32) & ((1 << width) - 1)
+
+
 def _make_reader(tb, layout):
+    """Return ``read(i, j) -> ptr`` for one pointer store layout."""
     if isinstance(layout, tuple) and layout[0] == "chunk":
-        # Pallas kernel layout: tb[chunk, lane, w], strip height n_pe,
-        # lane = (i-1) % n_pe, chunk-local wavefront w = lane + j - 1.
         n_pe = layout[1]
+        pack = layout[2] if len(layout) > 2 else 1
 
         def read(i, j):
             c = jnp.clip((i - 1) // n_pe, 0, tb.shape[0] - 1)
             lane = jnp.clip((i - 1) % n_pe, 0, n_pe - 1)
             w = jnp.clip(lane + j - 1, 0, tb.shape[2] - 1)
-            return tb[c, lane, w]
+            byte = tb[c, lane // pack, w]
+            return _unpack(byte, lane % pack, pack)
+        return read
+    if isinstance(layout, tuple) and layout[0] == "diag":
+        pack = layout[1]
+
+        def read(i, j):
+            d = jnp.clip(i + j - 1, 0, tb.shape[0] - 1)
+            byte = tb[d, jnp.clip(i // pack, 0, tb.shape[1] - 1)]
+            return _unpack(byte, i % pack, pack)
         return read
     if layout == "diag":
         def read(i, j):
@@ -42,13 +96,58 @@ def _make_reader(tb, layout):
     return read
 
 
-def run(spec: T.DPKernelSpec, result: T.DPResult, max_len: int) -> T.Alignment:
+def default_max_len(tb_shape, layout) -> int:
+    """Safe step budget derived from the pointer store's own (bucketed)
+    shape: an upper bound on Q + R, plus one for the terminating cell —
+    a walk can never legitimately exceed it."""
+    if isinstance(layout, tuple) and layout[0] == "chunk":
+        n_pe = layout[1]
+        q = tb_shape[0] * n_pe
+        r = tb_shape[2] - n_pe + 1
+        return q + r + 1
+    if layout == "row":
+        return tb_shape[0] + tb_shape[1]
+    # 'diag' layouts store >= Q + R wavefront rows
+    return tb_shape[0] + 1
+
+
+def _fsm_step(tspec, read, i, j, state):
+    """One FSM transition shared by the single and batched walkers."""
+    stop_here = tspec.stop_fn(i, j)
+    ptr = read(i, j).astype(jnp.int32)
+    move, nstate = tspec.fsm(state, ptr)
+    move = jnp.asarray(move, jnp.int32)
+    # Boundary cells are init cells: no pointer was stored.  For kernels
+    # that trace to the origin/top row their moves are implicit (row 0
+    # walks LEFT, column 0 walks UP); local/overlap kernels instead end
+    # the path at the boundary (ptr END / stop condition).
+    if tspec.stop in (T.STOP_ORIGIN, T.STOP_TOP_ROW):
+        on_row0 = (i == 0) & (j > 0)
+        on_col0 = (j == 0) & (i > 0)
+        move = jnp.where(on_row0, T.MOVE_LEFT,
+                         jnp.where(on_col0, T.MOVE_UP, move))
+        nstate = jnp.where(on_row0 | on_col0, state, nstate)
+    is_end = jnp.logical_or(stop_here, move == T.MOVE_END)
+    di = jnp.where((move == T.MOVE_DIAG) | (move == T.MOVE_UP), 1, 0)
+    dj = jnp.where((move == T.MOVE_DIAG) | (move == T.MOVE_LEFT), 1, 0)
+    return move, jnp.asarray(nstate, jnp.int32), is_end, di, dj
+
+
+def run(spec: T.DPKernelSpec, result: T.DPResult,
+        max_len: int | None = None) -> T.Alignment:
     """Walk pointers from the optimum cell back to the path start.
 
-    ``moves`` comes out in end->start order; ``n_moves`` gives its length.
+    ``moves`` comes out in end->start order; ``n_moves`` gives its
+    length.  ``max_len=None`` derives the always-sufficient budget from
+    the pointer store shape; an explicit smaller budget that runs out
+    sets ``truncated`` on the result (``raise_if_truncated`` turns that
+    into an error at host-side harvest instead of silently returning the
+    corrupt partial path).
     """
     tspec = spec.traceback
     assert tspec is not None, f"kernel {spec.name} has no traceback"
+    if max_len is None:
+        max_len = default_max_len(result.tb.shape, result.tb_layout)
     read = _make_reader(result.tb, result.tb_layout)
 
     def cond(c):
@@ -57,39 +156,88 @@ def run(spec: T.DPKernelSpec, result: T.DPResult, max_len: int) -> T.Alignment:
 
     def body(c):
         i, j, state, k, done, moves = c
-        stop_here = tspec.stop_fn(i, j)
-        ptr = read(i, j).astype(jnp.int32)
-        move, nstate = tspec.fsm(state, ptr)
-        move = jnp.asarray(move, jnp.int32)
-        # Boundary cells are init cells: no pointer was stored.  For kernels
-        # that trace to the origin/top row their moves are implicit (row 0
-        # walks LEFT, column 0 walks UP); local/overlap kernels instead end
-        # the path at the boundary (ptr END / stop condition).
-        if tspec.stop in (T.STOP_ORIGIN, T.STOP_TOP_ROW):
-            on_row0 = (i == 0) & (j > 0)
-            on_col0 = (j == 0) & (i > 0)
-            move = jnp.where(on_row0, T.MOVE_LEFT,
-                             jnp.where(on_col0, T.MOVE_UP, move))
-            nstate = jnp.where(on_row0 | on_col0, state, nstate)
-        is_end = jnp.logical_or(stop_here, move == T.MOVE_END)
+        move, nstate, is_end, di, dj = _fsm_step(tspec, read, i, j, state)
         rec = jnp.where(is_end, jnp.int32(T.MOVE_END), move)
         moves = jax.lax.dynamic_update_index_in_dim(
             moves, jnp.where(is_end, jnp.uint8(0), rec.astype(jnp.uint8)), k, 0)
-        di = jnp.where((move == T.MOVE_DIAG) | (move == T.MOVE_UP), 1, 0)
-        dj = jnp.where((move == T.MOVE_DIAG) | (move == T.MOVE_LEFT), 1, 0)
         i2 = jnp.where(is_end, i, i - di)
         j2 = jnp.where(is_end, j, j - dj)
         k2 = jnp.where(is_end, k, k + 1)
-        return (i2, j2, jnp.asarray(nstate, jnp.int32), k2, is_end, moves)
+        return (i2, j2, nstate, k2, is_end, moves)
 
     moves0 = jnp.zeros((max_len,), jnp.uint8)
     init = (jnp.asarray(result.end_i, jnp.int32),
             jnp.asarray(result.end_j, jnp.int32),
             jnp.int32(tspec.initial_state), jnp.int32(0),
             jnp.asarray(False), moves0)
-    i, j, _, k, _, moves = jax.lax.while_loop(cond, body, init)
+    i, j, _, k, done, moves = jax.lax.while_loop(cond, body, init)
     return T.Alignment(score=result.score, end_i=result.end_i, end_j=result.end_j,
-                       start_i=i, start_j=j, moves=moves, n_moves=k)
+                       start_i=i, start_j=j, moves=moves, n_moves=k,
+                       truncated=jnp.logical_not(done))
+
+
+def run_batched(spec: T.DPKernelSpec, result: T.DPResult,
+                max_len: int | None = None) -> T.Alignment:
+    """Batched traceback with early exit: ``result`` carries a leading
+    batch axis (a vmapped fill); one ``while_loop`` advances every still-
+    active row and terminates when the whole block has hit its END
+    pointer — the loop runs max-path-length steps over the block, not
+    ``max_len`` worst-case steps.  Bit-identical to ``run`` row by row.
+    """
+    tspec = spec.traceback
+    assert tspec is not None, f"kernel {spec.name} has no traceback"
+    if max_len is None:
+        max_len = default_max_len(result.tb.shape[1:], result.tb_layout)
+    n = result.end_i.shape[0]
+    rows = jnp.arange(n)
+    layout = result.tb_layout
+    read = jax.vmap(lambda t, i, j: _make_reader(t, layout)(i, j))
+    tb = result.tb
+
+    def cond(c):
+        i, j, state, k, done, moves = c
+        return jnp.any(~done & (k < max_len))
+
+    def body(c):
+        i, j, state, k, done, moves = c
+        active = ~done & (k < max_len)
+        move, nstate, is_end, di, dj = _fsm_step(
+            tspec, lambda a, b: read(tb, a, b), i, j, state)
+        rec = jnp.where(is_end, jnp.uint8(0), move.astype(jnp.uint8))
+        kc = jnp.clip(k, 0, max_len - 1)
+        moves = moves.at[rows, kc].set(
+            jnp.where(active, rec, moves[rows, kc]))
+        i = jnp.where(active & ~is_end, i - di, i)
+        j = jnp.where(active & ~is_end, j - dj, j)
+        k = jnp.where(active & ~is_end, k + 1, k)
+        state = jnp.where(active, nstate, state)
+        done = done | (active & is_end)
+        return (i, j, state, k, done, moves)
+
+    init = (jnp.asarray(result.end_i, jnp.int32),
+            jnp.asarray(result.end_j, jnp.int32),
+            jnp.full((n,), tspec.initial_state, jnp.int32),
+            jnp.zeros((n,), jnp.int32),
+            jnp.zeros((n,), bool),
+            jnp.zeros((n, max_len), jnp.uint8))
+    i, j, _, k, done, moves = jax.lax.while_loop(cond, body, init)
+    return T.Alignment(score=result.score, end_i=result.end_i,
+                       end_j=result.end_j, start_i=i, start_j=j,
+                       moves=moves, n_moves=k,
+                       truncated=jnp.logical_not(done))
+
+
+def raise_if_truncated(alignment: T.Alignment) -> T.Alignment:
+    """Host-side guard: error out instead of consuming a corrupt partial
+    path (call where device results land — batch harvest, SAM emission)."""
+    t = alignment.truncated
+    if t is not None and bool(np.any(np.asarray(t))):
+        raise TracebackTruncated(
+            "traceback ran out of its step budget before reaching a stop "
+            "cell; the move array is a corrupt partial path (re-run with a "
+            "larger max_len — the default budget derived from the pointer "
+            "store is always sufficient)")
+    return alignment
 
 
 # ---------------------------------------------------------------------------
@@ -102,34 +250,29 @@ def moves_to_cigar(moves, n_moves, ops=None) -> str:
     repo convention (MOVE_UP = query-consuming = 'D'); SAM emission with
     the read on the query axis passes ``{MOVE_DIAG: 'M', MOVE_UP: 'I',
     MOVE_LEFT: 'D'}`` instead (see ``repro.mapping.sam``).
+
+    One device->host transfer + numpy run-length encoding: never pulls
+    scalars across the device boundary one move at a time.
     """
     if ops is None:
         ops = {T.MOVE_DIAG: "M", T.MOVE_UP: "D", T.MOVE_LEFT: "I"}
-    seq = [ops[int(m)] for m in list(moves[: int(n_moves)])[::-1]]
-    if not seq:
+    n = int(n_moves)
+    if n == 0:
         return ""
-    out, cur, cnt = [], seq[0], 1
-    for o in seq[1:]:
-        if o == cur:
-            cnt += 1
-        else:
-            out.append(f"{cnt}{cur}")
-            cur, cnt = o, 1
-    out.append(f"{cnt}{cur}")
-    return "".join(out)
+    mv = np.asarray(moves)[:n][::-1]          # single transfer, then numpy
+    starts = np.concatenate([[0], np.flatnonzero(np.diff(mv)) + 1])
+    ends = np.concatenate([starts[1:], [n]])
+    return "".join(f"{e - s}{ops[int(mv[s])]}"
+                   for s, e in zip(starts, ends))
 
 
 def path_cells(alignment: T.Alignment):
-    """Yield the (i, j) cells on the path from start to end (host-side)."""
-    i, j = int(alignment.start_i), int(alignment.start_j)
-    cells = [(i, j)]
-    for m in list(alignment.moves[: int(alignment.n_moves)])[::-1]:
-        m = int(m)
-        if m == T.MOVE_DIAG:
-            i, j = i + 1, j + 1
-        elif m == T.MOVE_UP:
-            i += 1
-        elif m == T.MOVE_LEFT:
-            j += 1
-        cells.append((i, j))
-    return cells
+    """The (i, j) cells on the path from start to end (host-side)."""
+    i0, j0 = int(alignment.start_i), int(alignment.start_j)
+    mv = np.asarray(alignment.moves)[: int(alignment.n_moves)][::-1]
+    mv = mv.astype(np.int64)
+    di = np.cumsum((mv == T.MOVE_DIAG) | (mv == T.MOVE_UP))
+    dj = np.cumsum((mv == T.MOVE_DIAG) | (mv == T.MOVE_LEFT))
+    ii = np.concatenate([[i0], i0 + di])
+    jj = np.concatenate([[j0], j0 + dj])
+    return [(int(a), int(b)) for a, b in zip(ii, jj)]

@@ -83,6 +83,11 @@ class DPKernelSpec:
         (step 6).  ``None`` disables banding.
       * ``objective``: 'max' or 'min' (DTW-family minimizes).
       * ``region``: where the optimum is searched / traceback starts.
+      * ``ptr_bits``: significant low bits in the traceback pointer the PE
+        emits (the paper's per-kernel pointer width: 2 for linear-gap
+        FSMs, 4 for affine, 7 for two-piece).  The back-ends pack
+        ``tb_pack = 8 // ptr_bits`` pointers per stored byte, cutting
+        traceback memory and HBM traffic by the same factor.
     """
     name: str
     n_layers: int
@@ -97,8 +102,22 @@ class DPKernelSpec:
     traceback: Optional[TracebackSpec] = None
     band: Optional[int] = None
     primary_layer: int = 0
+    ptr_bits: int = 8
 
     # -- helpers -----------------------------------------------------------
+    def __post_init__(self):
+        if not 1 <= self.ptr_bits <= 8:
+            raise ValueError(f"ptr_bits must be in [1, 8], got {self.ptr_bits}")
+
+    @property
+    def tb_pack(self) -> int:
+        """Pointers per traceback byte: largest power of two whose slot
+        width (8 // pack) still holds ``ptr_bits``."""
+        pack = 1
+        while pack * 2 <= 8 and 8 // (pack * 2) >= self.ptr_bits:
+            pack *= 2
+        return pack
+
     @property
     def is_min(self) -> bool:
         return self.objective == "min"
@@ -145,7 +164,12 @@ class DPResult:
 
 @dataclasses.dataclass
 class Alignment:
-    """Final alignment: score, end/start cells and the move string."""
+    """Final alignment: score, end/start cells and the move string.
+
+    ``truncated`` is True when the traceback walk hit its ``max_len``
+    step budget before reaching a stop cell — ``moves`` is then a
+    corrupt partial path and must not be consumed (host-side harvest
+    raises via ``traceback.raise_if_truncated``)."""
     score: Any
     end_i: Any
     end_j: Any
@@ -153,6 +177,7 @@ class Alignment:
     start_j: Any = None
     moves: Any = None      # uint8 [max_len], reversed (end -> start) order
     n_moves: Any = None
+    truncated: Any = None  # bool; None for score-only alignments
 
 
 # jit/vmap-able result containers (tb_layout is static metadata).
@@ -161,5 +186,5 @@ jax.tree_util.register_dataclass(
     meta_fields=["tb_layout"])
 jax.tree_util.register_dataclass(
     Alignment, data_fields=["score", "end_i", "end_j", "start_i", "start_j",
-                            "moves", "n_moves"],
+                            "moves", "n_moves", "truncated"],
     meta_fields=[])

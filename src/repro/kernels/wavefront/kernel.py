@@ -33,9 +33,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.pallas_compat import CompilerParams
 
 from repro.core.spec_utils import band_mask, region_mask
+from repro.core.traceback import pack_lanes
 
 
-def _kernel_body(spec, n_pe, treedef, leaf_shapes,
+def _kernel_body(spec, n_pe, tb_pack, treedef, leaf_shapes,
                  # refs (order must match ops.py):
                  lens_ref, q_ref, r_ref, init_row_ref, init_col_ref,
                  *rest):
@@ -106,11 +107,13 @@ def _kernel_body(spec, n_pe, treedef, leaf_shapes,
             band_mask(spec, i_glob, j)
         cur = jnp.where(valid[:, None], scores, sent)
 
-        # coalesced TB store: one contiguous lane-vector per wavefront
+        # coalesced TB store: one contiguous lane-vector per wavefront,
+        # bit-packed tb_pack pointers per byte along the lane axis
         # (int indices must be pl.ds slices: older pallas interpret-mode
         # discharge rules only accept Slice/array indices)
+        packed = pack_lanes(jnp.where(valid, ptr, jnp.uint8(0)), tb_pack)
         pl.store(tb_ref, (pl.ds(0, 1), slice(None), pl.ds(w, 1)),
-                 jnp.where(valid, ptr, jnp.uint8(0))[None, :, None])
+                 packed[None, :, None])
 
         # preserved-row buffer: the strip's last PE exports its row
         j_last = w - (n_pe - 1) + 1
@@ -138,14 +141,17 @@ def _kernel_body(spec, n_pe, treedef, leaf_shapes,
 
 
 def wavefront_fill(spec, params, query, ref, lens, n_pe: int = 128,
-                   interpret: bool = False):
+                   interpret: bool = False, tb_pack: int = 1):
     """Launch the matrix-fill kernel.
 
-    query must be padded to a multiple of n_pe.  Returns (best (C, N_PE),
-    best_j (C, N_PE), tb (C, N_PE, N_PE+R-1)).
+    query must be padded to a multiple of n_pe.  Returns (tb, best, best_j)
+    with best/best_j (C, N_PE) and tb (C, N_PE // tb_pack, N_PE+R-1) —
+    ``tb_pack`` pointers per byte along the lane axis.
     """
     Q, R = query.shape[0], ref.shape[0]
     assert Q % n_pe == 0
+    assert n_pe % tb_pack == 0, (n_pe, tb_pack)
+    n_lane_bytes = n_pe // tb_pack
     n_chunks = Q // n_pe
     L = spec.n_layers
     dt = spec.score_dtype
@@ -171,17 +177,18 @@ def wavefront_fill(spec, params, query, ref, lens, n_pe: int = 128,
     ] + [pl.BlockSpec(l.shape, zero_map(l.ndim)) for l in leaves_in]
 
     out_specs = [
-        pl.BlockSpec((1, n_pe, wt), lambda c: (c, 0, 0)),             # tb
+        pl.BlockSpec((1, n_lane_bytes, wt), lambda c: (c, 0, 0)),     # tb
         pl.BlockSpec((1, n_pe), lambda c: (c, 0)),                    # best
         pl.BlockSpec((1, n_pe), lambda c: (c, 0)),                    # best_j
     ]
     out_shapes = [
-        jax.ShapeDtypeStruct((n_chunks, n_pe, wt), jnp.uint8),
+        jax.ShapeDtypeStruct((n_chunks, n_lane_bytes, wt), jnp.uint8),
         jax.ShapeDtypeStruct((n_chunks, n_pe), dt),
         jax.ShapeDtypeStruct((n_chunks, n_pe), jnp.int32),
     ]
 
-    kernel = functools.partial(_kernel_body, spec, n_pe, treedef, leaf_shapes)
+    kernel = functools.partial(_kernel_body, spec, n_pe, tb_pack, treedef,
+                               leaf_shapes)
     fn = pl.pallas_call(
         kernel,
         grid=(n_chunks,),

@@ -4,18 +4,25 @@ returning the same DPResult the pure-JAX engines produce.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import types as T
+from repro.core.engine import resolve_tb_pack
 from . import kernel as K
 
 
 def run(spec, params, query, ref, q_len=None, r_len=None,
-        interpret: bool = False, n_pe: int = 32) -> T.DPResult:
+        interpret: bool = False, n_pe: int = 32,
+        tb_pack: Optional[int] = None) -> T.DPResult:
     Q, R = query.shape[0], ref.shape[0]
     q_len = jnp.asarray(Q if q_len is None else q_len, jnp.int32)
     r_len = jnp.asarray(R if r_len is None else r_len, jnp.int32)
+    pack = resolve_tb_pack(spec, tb_pack)
+    if n_pe % pack:
+        pack = 1                    # lane strip must split evenly into bytes
 
     pad = (-Q) % n_pe
     if pad:
@@ -24,7 +31,8 @@ def run(spec, params, query, ref, q_len=None, r_len=None,
 
     lens = jnp.stack([q_len, r_len])
     tb, best, best_j = K.wavefront_fill(spec, params, query, ref, lens,
-                                        n_pe=n_pe, interpret=interpret)
+                                        n_pe=n_pe, interpret=interpret,
+                                        tb_pack=pack)
     flat = best.reshape(-1)
     k = spec.arg_best(flat)
     score = flat[k]
@@ -32,5 +40,6 @@ def run(spec, params, query, ref, q_len=None, r_len=None,
     chunk = k // n_pe
     end_i = (chunk * n_pe + lane + 1).astype(jnp.int32)
     end_j = best_j.reshape(-1)[k]
+    layout = ("chunk", n_pe) if pack == 1 else ("chunk", n_pe, pack)
     return T.DPResult(score=score, end_i=end_i, end_j=end_j,
-                      tb=tb, tb_layout=("chunk", n_pe))
+                      tb=tb, tb_layout=layout)

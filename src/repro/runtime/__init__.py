@@ -7,19 +7,20 @@ engine through one registry, compiles through one plan cache, and pads
 through one bucketing policy — instead of five independent jit call sites
 and a global max_len pad.
 """
-from .registry import (Engine, available_engines, get_engine,
-                       register_engine)
+from .registry import (Engine, available_engines, engine_options,
+                       get_engine, register_engine)
 from .plan import (CompiledPlan, align_impl, clear_plan_cache, get_plan,
-                   plan_cache_info)
+                   plan_cache_info, traceback_bytes)
 from .bucketing import (Bucket, bucket_length, bucket_shape,
                         inverse_permutation, max_grid_bucket,
                         pack_by_bucket, pad_to_bucket)
 from .dispatch import run_pairs, run_pipelined
 
 __all__ = [
-    "Engine", "available_engines", "get_engine", "register_engine",
+    "Engine", "available_engines", "engine_options", "get_engine",
+    "register_engine",
     "CompiledPlan", "align_impl", "clear_plan_cache", "get_plan",
-    "plan_cache_info",
+    "plan_cache_info", "traceback_bytes",
     "Bucket", "bucket_length", "bucket_shape", "inverse_permutation",
     "max_grid_bucket", "pack_by_bucket", "pad_to_bucket",
     "run_pairs", "run_pipelined",

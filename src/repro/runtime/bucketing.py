@@ -106,11 +106,18 @@ def pack_by_bucket(lengths: Sequence[tuple[int, int]],
     sharing one bucket shape; concatenating all ``batch.indices`` gives
     the packed order, and ``inv`` is its inverse permutation —
     ``packed_results[inv[i]]`` is the result of original request ``i``.
+
+    Within a bucket, requests are ordered by descending ``q_len + r_len``
+    before chunking, so blocks come out length-homogeneous: the engine's
+    early-exit fill stops at the *block max* wavefront, and a sorted
+    block's max is its own length scale rather than the bucket's.
     """
     groups: dict[tuple[int, int], list[int]] = {}
     for i, (ql, rl) in enumerate(lengths):
         b = bucket_shape(ql, rl, min_bucket, max_bucket, growth)
         groups.setdefault(b, []).append(i)
+    for idx in groups.values():
+        idx.sort(key=lambda i: (-(lengths[i][0] + lengths[i][1]), i))
     batches: list[Bucket] = []
     order: list[int] = []
     for b in sorted(groups):

@@ -23,6 +23,7 @@ from typing import Callable, Iterable, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+import repro.core.traceback as tb_mod
 import repro.core.types as T
 
 from . import bucketing
@@ -75,10 +76,11 @@ def _slice_out(out, i):
     def pick(x):
         return None if x is None else np.asarray(x)[i]
     if isinstance(out, T.Alignment):
-        return T.Alignment(score=pick(out.score), end_i=pick(out.end_i),
-                           end_j=pick(out.end_j), start_i=pick(out.start_i),
-                           start_j=pick(out.start_j), moves=pick(out.moves),
-                           n_moves=pick(out.n_moves))
+        return tb_mod.raise_if_truncated(T.Alignment(
+            score=pick(out.score), end_i=pick(out.end_i),
+            end_j=pick(out.end_j), start_i=pick(out.start_i),
+            start_j=pick(out.start_j), moves=pick(out.moves),
+            n_moves=pick(out.n_moves), truncated=pick(out.truncated)))
     return T.DPResult(score=pick(out.score), end_i=pick(out.end_i),
                       end_j=pick(out.end_j), tb=pick(out.tb),
                       tb_layout=out.tb_layout)

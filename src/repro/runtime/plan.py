@@ -10,6 +10,7 @@ call sites, each re-tracing the same schedule.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 from typing import Any, Callable, Optional
 
@@ -60,6 +61,8 @@ class PlanKey:
     with_traceback: bool
     mode: str = "align"              # 'align' | 'fill'
     placement: Optional[str] = None  # e.g. 'data@data=8' for sharded plans
+    strip: int = 1                   # anti-diagonals per scan step
+    tb_pack: int = 1                 # traceback pointers packed per byte
 
 
 class CompiledPlan:
@@ -78,6 +81,15 @@ class CompiledPlan:
         self.spec = spec
         self.calls = 0
         engine_fn = registry.get_engine(engine_name)
+        eng_opts = registry.engine_options(engine_name)
+        # forward the plan's resolved schedule knobs (strip, tb_pack) to
+        # engines that declare them; PlanKey fields are named after them.
+        # 'dynamic'-valued options are runtime arguments, not cache knobs.
+        opts = {name: getattr(key, name) for name, v in eng_opts.items()
+                if v != "dynamic"}
+        if opts:
+            engine_fn = functools.partial(engine_fn, **opts)
+        supports_bound = eng_opts.get("live_bound") == "dynamic"
         mode = key.mode
         wtb = key.with_traceback
 
@@ -91,9 +103,29 @@ class CompiledPlan:
         if key.batch_size is None:
             fn = single
         else:
+            # Batched: one shared fill bound (max over the block, passed
+            # through vmap unbatched so the engine's early-exit loop
+            # keeps a scalar counter), then — for traceback plans — one
+            # batched walk over an active mask that terminates when
+            # every row has hit its END pointer, instead of vmapping a
+            # worst-case per-row while_loop.
+            max_len = key.bucket_shape[0][0] + key.bucket_shape[1][0] + 1
+
+            def eng(params, query, ref, q_len, r_len, bound):
+                kw = {"live_bound": bound} if supports_bound else {}
+                return engine_fn(spec, params, query, ref, q_len, r_len,
+                                 **kw)
+
             def fn(params, queries, refs, q_lens, r_lens):
-                return jax.vmap(single, in_axes=(None, 0, 0, 0, 0))(
-                    params, queries, refs, q_lens, r_lens)
+                bound = jnp.max(q_lens + r_lens)
+                res = jax.vmap(eng, in_axes=(None, 0, 0, 0, 0, None))(
+                    params, queries, refs, q_lens, r_lens, bound)
+                if mode == "fill":
+                    return res
+                if wtb:
+                    return tb_mod.run_batched(spec, res, max_len=max_len)
+                return T.Alignment(score=res.score, end_i=res.end_i,
+                                   end_j=res.end_j)
 
         # Buffer donation is only safe when the caller hands over freshly
         # padded copies (the bucketed batch paths do); XLA:CPU does not
@@ -158,12 +190,75 @@ def _placement(mesh, mesh_axis: str) -> Optional[str]:
     return f"{mesh_axis}@{dims}"
 
 
+def resolve_engine_opts(spec: T.DPKernelSpec, engine_name: str,
+                        strip: Optional[int] = None,
+                        tb_pack: Optional[int] = None) -> tuple[int, int]:
+    """Resolve the (strip, tb_pack) schedule knobs for one engine.
+
+    Engines that don't declare a knob pin it to 1 (so the cache never
+    splits on options an engine ignores); ``None`` takes the engine's
+    registered default — a per-backend dict (``{'cpu': ..., 'default':
+    ...}``) resolves against ``jax.default_backend()`` — with ``tb_pack``
+    falling back to the kernel's natural packing ``spec.tb_pack``
+    (8 // ptr_bits).
+    """
+    sup = registry.engine_options(engine_name)
+    strip_r = 1
+    if "strip" in sup:
+        if strip is None:
+            strip = sup["strip"]
+            if isinstance(strip, dict):
+                strip = strip.get(jax.default_backend(), strip["default"])
+        strip_r = int(strip)
+        if strip_r < 1:
+            raise ValueError(f"strip must be >= 1, got {strip_r}")
+    pack_r = 1
+    if "tb_pack" in sup and spec.traceback is not None:
+        from repro.core.engine import resolve_tb_pack
+        default = sup["tb_pack"]
+        if tb_pack is None and default is not None:
+            tb_pack = default
+        pack_r = resolve_tb_pack(spec, tb_pack)   # one validation source
+    return strip_r, pack_r
+
+
+# lane-strip height of the Pallas kernel's ('chunk', n_pe) tb layout;
+# mirrors kernels.wavefront.ops.run's n_pe default (not imported here —
+# that would defeat the registry's lazy pallas loading)
+PALLAS_N_PE = 32
+
+
+def traceback_bytes(spec: T.DPKernelSpec, q_bucket: int, r_bucket: int, *,
+                    engine_name: str = "wavefront",
+                    strip: Optional[int] = None,
+                    tb_pack: Optional[int] = None) -> int:
+    """Traceback-store bytes one alignment occupies at a bucket shape —
+    the per-alignment HBM footprint that caps how many alignments a
+    fixed memory budget can keep in flight (packed pointers cut it by
+    ``tb_pack``).
+
+    Layout-aware per engine: the wavefront 'diag' store is
+    ⌈(Q+R)/strip⌉ * strip wavefront rows of ⌈(Q+1)/tb_pack⌉ bytes; the
+    Pallas ('chunk', n_pe) store is ⌈Q/n_pe⌉ chunks of (n_pe/tb_pack) *
+    (n_pe+R-1) bytes (Q padded up to the lane strip)."""
+    if spec.traceback is None:
+        return 0
+    strip_r, pack_r = resolve_engine_opts(spec, engine_name, strip, tb_pack)
+    if engine_name.startswith("pallas"):
+        n_pe = PALLAS_N_PE
+        n_chunks = -(-q_bucket // n_pe)
+        return n_chunks * (n_pe // pack_r) * (n_pe + r_bucket - 1)
+    n_rows = -(-(q_bucket + r_bucket) // strip_r) * strip_r
+    return n_rows * (-(-(q_bucket + 1) // pack_r))
+
+
 def get_plan(spec: T.DPKernelSpec, engine_name: str,
              q_shape: tuple, r_shape: tuple, *,
              batch_size: Optional[int] = None,
              with_traceback: bool = True, mode: str = "align",
              donate: bool = False, mesh=None,
-             mesh_axis: str = "data") -> CompiledPlan:
+             mesh_axis: str = "data", strip: Optional[int] = None,
+             tb_pack: Optional[int] = None) -> CompiledPlan:
     """Fetch (or build) the shared plan for one bucketed input shape.
 
     ``q_shape``/``r_shape`` are per-pair shapes including char dims (the
@@ -174,14 +269,21 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
     object itself keys the cache (two specs made by the same
     ``kernels_zoo.make`` call share; distinct constructions do not —
     their closures could differ).
+
+    ``strip`` (anti-diagonals per scan step) and ``tb_pack`` (pointers
+    per traceback byte) select the engine schedule; ``None`` resolves the
+    engine/kernel defaults (strip-mined, packed).  Engines that don't
+    declare a knob ignore it without splitting the cache.
     """
     wtb = bool(with_traceback and spec.traceback is not None)
+    strip_r, pack_r = resolve_engine_opts(spec, engine_name, strip, tb_pack)
     if jax.default_backend() == "cpu":
         donate = False   # donation is a no-op on CPU; don't split the cache
     if mesh is None:
         mesh_axis = "data"   # axis is meaningless un-sharded; don't split
     cache_key = (spec, engine_name, tuple(q_shape), tuple(r_shape),
-                 batch_size, wtb, mode, donate, mesh, mesh_axis)
+                 batch_size, wtb, mode, donate, mesh, mesh_axis,
+                 strip_r, pack_r)
     plan = _CACHE.get(cache_key)
     if plan is not None:
         _STATS["hits"] += 1
@@ -193,7 +295,8 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
             key = PlanKey(kernel=spec.name, engine=engine_name,
                           bucket_shape=(tuple(q_shape), tuple(r_shape)),
                           batch_size=batch_size, with_traceback=wtb,
-                          mode=mode, placement=_placement(mesh, mesh_axis))
+                          mode=mode, placement=_placement(mesh, mesh_axis),
+                          strip=strip_r, tb_pack=pack_r)
             plan = CompiledPlan(key, spec, engine_name, donate=donate,
                                 mesh=mesh, mesh_axis=mesh_axis)
             _CACHE[cache_key] = plan

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Optional, Protocol
+from typing import Callable, Mapping, Optional, Protocol
 
 
 class Engine(Protocol):
@@ -27,6 +27,7 @@ class _Entry:
     fn: Optional[Callable] = None        # resolved engine
     loader: Optional[Callable] = None    # deferred constructor
     doc: str = ""
+    options: Mapping[str, object] = dataclasses.field(default_factory=dict)
 
 
 _REGISTRY: dict[str, _Entry] = {}
@@ -35,15 +36,25 @@ _LOCK = threading.Lock()
 
 def register_engine(name: str, fn: Optional[Callable] = None, *,
                     loader: Optional[Callable] = None, doc: str = "",
+                    options: Optional[Mapping[str, object]] = None,
                     overwrite: bool = False) -> None:
     """Register engine ``name`` either eagerly (``fn``) or deferred
-    (``loader() -> fn``, imported/built on first :func:`get_engine`)."""
+    (``loader() -> fn``, imported/built on first :func:`get_engine`).
+
+    ``options`` declares keyword schedule knobs the engine accepts beyond
+    the fixed positional signature, mapped to their defaults (``None`` =
+    resolved from the kernel spec at plan time).  The plan cache keys
+    compiled executables by the resolved values and forwards them to the
+    engine — e.g. the wavefront engine's ``strip`` (anti-diagonals per
+    scan step) and ``tb_pack`` (pointers per traceback byte).
+    """
     if (fn is None) == (loader is None):
         raise ValueError("pass exactly one of fn= or loader=")
     with _LOCK:
         if name in _REGISTRY and not overwrite:
             raise ValueError(f"engine {name!r} already registered")
-        _REGISTRY[name] = _Entry(name=name, fn=fn, loader=loader, doc=doc)
+        _REGISTRY[name] = _Entry(name=name, fn=fn, loader=loader, doc=doc,
+                                 options=dict(options or {}))
 
 
 def get_engine(name: str) -> Callable:
@@ -66,6 +77,13 @@ def available_engines() -> list[str]:
 def engine_doc(name: str) -> str:
     entry = _REGISTRY.get(name)
     return entry.doc if entry else ""
+
+
+def engine_options(name: str) -> dict[str, object]:
+    """Schedule knobs engine ``name`` accepts, mapped to their defaults
+    (``None`` = derived from the kernel spec at plan time)."""
+    entry = _REGISTRY.get(name)
+    return dict(entry.options) if entry else {}
 
 
 # ---------------------------------------------------------------------------
@@ -96,11 +114,22 @@ def _load_pallas(interpret: bool):
 
 register_engine("reference", loader=_load_reference,
                 doc="row-major oracle (C-simulation analogue)")
+# the per-backend strip default lives with the engine (one source of
+# truth); importing it here costs nothing pallas-related
+from repro.core.engine import STRIP_DEFAULTS  # noqa: E402
+
 register_engine("wavefront", loader=_load_wavefront,
-                doc="anti-diagonal scan back-end (paper §5.1)")
+                doc="anti-diagonal scan back-end (paper §5.1)",
+                # strip: per-backend dict resolved at plan time.
+                # live_bound is a *dynamic* argument (shared batch fill
+                # bound), not a compile-time cache knob
+                options={"strip": STRIP_DEFAULTS,
+                         "tb_pack": None, "live_bound": "dynamic"})
 register_engine("banded", loader=_load_banded,
                 doc="O(n*W) band-packed lanes, score-only")
 register_engine("pallas", loader=lambda: _load_pallas(False),
-                doc="Pallas TPU kernel of the wavefront schedule")
+                doc="Pallas TPU kernel of the wavefront schedule",
+                options={"tb_pack": None})
 register_engine("pallas_interpret", loader=lambda: _load_pallas(True),
-                doc="Pallas kernel in interpreter mode (CPU-testable)")
+                doc="Pallas kernel in interpreter mode (CPU-testable)",
+                options={"tb_pack": None})

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batch as core_batch, kernels_zoo
-from repro.core.traceback import moves_to_cigar
+from repro.core.traceback import moves_to_cigar, raise_if_truncated
 from repro.ft import DEAD, HeartbeatMonitor
 from repro.runtime import bucketing
 from repro.runtime import dispatch as dispatch_mod
@@ -49,6 +49,7 @@ class AlignRequest:
     ref: np.ndarray
     result: Optional[dict] = None
     gen: int = 0                 # bumped on every re-submission
+    waits: int = 0               # batch pops this request was passed over
 
 
 class AlignFuture:
@@ -106,14 +107,28 @@ class AlignmentService:
     (the largest bucket is ``max_len`` snapped up to the bucket grid);
     ``min_bucket`` floors the smallest.  ``pipeline_depth`` is how many
     batches may be in flight on the device at once (1 = synchronous).
+
+    ``tb_budget_bytes`` sizes batches by memory instead of the fixed
+    ``block``: each (kernel, bucket) channel launches as many alignments
+    as fit the traceback-store budget (never fewer than ``block``, at
+    most ``max_block``).  Bit-packed pointers cut the per-alignment
+    footprint by the kernel's ``tb_pack``, so the same budget admits up
+    to 4x larger blocks — the serving-side payoff of the packed store.
     """
+
+    # batch pops a request may be passed over (by longest-first block
+    # formation) before it jumps to the front of its queue
+    STALE_AFTER = 4
 
     def __init__(self, max_len: int = 256, block: int = 8, mesh=None,
                  engine_name: str = "wavefront", with_traceback: bool = True,
                  redispatch_after: float = 60.0,
                  min_bucket: int = bucketing.DEFAULT_MIN_BUCKET,
-                 coalesce: bool = True, pipeline_depth: int = 2):
+                 coalesce: bool = True, pipeline_depth: int = 2,
+                 tb_budget_bytes: Optional[int] = None, max_block: int = 256):
         self.max_len, self.block = max_len, block
+        self.tb_budget_bytes = tb_budget_bytes
+        self.max_block = max_block
         self.min_bucket = min(min_bucket, max_len)
         # largest admissible bucket: max_len snapped *up* to the grid, so
         # every request <= max_len has an on-grid bucket (an off-grid cap
@@ -137,6 +152,36 @@ class AlignmentService:
         return bucketing.bucket_shape(
             len(req.query), len(req.ref),
             min_bucket=self.min_bucket, max_bucket=self.max_bucket)
+
+    def block_for(self, kernel: str, bucket: Tuple[int, int]) -> int:
+        """Batch rows one launch carries at this (kernel, bucket) channel.
+
+        Without a budget this is the fixed ``block``.  With
+        ``tb_budget_bytes`` it is how many alignments' traceback stores
+        fit the budget (floored at ``block``, capped at ``max_block``) —
+        a 4x-packed kernel gets 4x the in-flight alignments per bucket.
+        """
+        if self.tb_budget_bytes is None:
+            return self._mesh_rounded(self.block)
+        spec, _, _ = self._channel(kernel)
+        per = plan_mod.traceback_bytes(spec, bucket[0], bucket[1],
+                                       engine_name=self.engine_name)
+        if per == 0:                      # score-only kernel: no tb store
+            return self._mesh_rounded(self.max_block)
+        return self._mesh_rounded(
+            max(self.block, min(self.max_block,
+                                self.tb_budget_bytes // per)))
+
+    def _mesh_rounded(self, block: int) -> int:
+        """Sharded plans partition the batch axis over the mesh 'data'
+        axis: round the block down to a divisible size (never below one
+        row per device) so a budget-derived count can't break the
+        sharding."""
+        if self.mesh is None:
+            return block
+        n = int(dict(zip(self.mesh.axis_names,
+                         self.mesh.devices.shape)).get("data", 1))
+        return max(n, block // n * n)
 
     def _channel(self, kernel: str):
         """Per-kernel spec/params (+ sharded aligner when on a mesh)."""
@@ -169,8 +214,7 @@ class AlignmentService:
 
     # -- batch formation ---------------------------------------------------
     def _pad_batch(self, reqs: List[AlignRequest], bucket: Tuple[int, int],
-                   char_shape, dtype):
-        n = self.block
+                   char_shape, dtype, n: int):
         Lq, Lr = bucket
         qs = np.zeros((n, Lq) + char_shape, dtype)
         rs = np.zeros((n, Lr) + char_shape, dtype)
@@ -187,13 +231,16 @@ class AlignmentService:
         return qs, rs, ql, rl
 
     def _coalesce_batch(self, kernel: str, bucket: Tuple[int, int],
-                        reqs: List[AlignRequest]) -> Tuple[int, int]:
+                        reqs: List[AlignRequest], block: int) -> Tuple[int, int]:
         """Top a partial batch up with requests from dominating buckets.
 
         A bucket ``b2`` dominates when both sides are >= ``bucket`` — its
         requests fit after padding to ``b2``, so the combined batch
         dispatches at the elementwise-max bucket.  Closest (smallest
         dominating) buckets are drained first to keep padding waste low.
+        Under a memory budget the row cap is re-evaluated at each grown
+        bucket (``block_for``), so coalescing into a bigger bucket can
+        never launch a batch whose traceback store exceeds the budget.
         """
         out_bucket = bucket
         donors = sorted(
@@ -203,52 +250,72 @@ class AlignmentService:
              and self.queues[(k2, b2)]),
             key=lambda b2: b2[0] * b2[1])
         for b2 in donors:
+            grown = (max(out_bucket[0], b2[0]), max(out_bucket[1], b2[1]))
+            allowed = min(block, self.block_for(kernel, grown))
+            if len(reqs) >= allowed:
+                break                 # growing further would bust the cap
             queue = self.queues[(kernel, b2)]
-            while queue and len(reqs) < self.block:
+            while queue and len(reqs) < allowed:
                 reqs.append(queue.pop(0))
-                out_bucket = (max(out_bucket[0], b2[0]),
-                              max(out_bucket[1], b2[1]))
-            if len(reqs) >= self.block:
+                out_bucket = grown
+            if len(reqs) >= allowed:
                 break
         return out_bucket
 
     def _next_batch(self):
-        """Pop the next (kernel, bucket, reqs, coalesced) batch, smallest
-        bucket first, or None when every queue is empty."""
+        """Pop the next (kernel, bucket, reqs, coalesced, rows) batch,
+        smallest bucket first, or None when every queue is empty."""
         pending = [(k, b) for (k, b) in sorted(
             self.queues, key=lambda kb: (kb[0], kb[1][0] * kb[1][1]))
             if self.queues[(k, b)]]
         if not pending:
             return None
         kernel, bucket = pending[0]
+        block = self.block_for(kernel, bucket)
         queue = self.queues[(kernel, bucket)]
-        reqs = [queue.pop(0) for _ in range(min(self.block, len(queue)))]
+        # longest-first within a bounded arrival window: blocks come out
+        # length-homogeneous (the engine's early-exit fill stops at the
+        # *block max* wavefront).  A passed-over counter guarantees
+        # progress under sustained arrivals: a request out-sorted
+        # STALE_AFTER times jumps to the front regardless of length, so
+        # no future can be starved by a stream of longer requests.
+        w = min(len(queue), 4 * block)
+        queue[:w] = sorted(
+            queue[:w],
+            key=lambda r: (r.waits < self.STALE_AFTER,
+                           -(len(r.query) + len(r.ref))))
+        reqs = [queue.pop(0) for _ in range(min(block, len(queue)))]
+        for r in queue[:w - len(reqs)]:
+            r.waits += 1
         coalesced = False
-        if self.coalesce and not queue and len(reqs) < self.block:
-            out_bucket = self._coalesce_batch(kernel, bucket, reqs)
+        if self.coalesce and not queue and len(reqs) < block:
+            out_bucket = self._coalesce_batch(kernel, bucket, reqs, block)
             coalesced = out_bucket != bucket
             bucket = out_bucket
-        return kernel, bucket, reqs, coalesced
+            if coalesced:   # re-cap the pad rows at the grown bucket
+                block = max(len(reqs),
+                            min(block, self.block_for(kernel, bucket)))
+        return kernel, bucket, reqs, coalesced, block
 
     # -- launch / harvest (the two pipeline stages) ------------------------
     def _launch(self, worker: str, item) -> InflightBatch:
         """Pad one batch and enqueue it on the device (non-blocking under
         JAX async dispatch).  On failure the popped requests go straight
         back to their queues — a raising plan must never lose work."""
-        kernel, bucket, reqs, coalesced = item
+        kernel, bucket, reqs, coalesced, block = item
         self.monitor.beat(worker)
         try:
             spec, params, sharded_fn = self._channel(kernel)
             qs, rs, ql, rl = self._pad_batch(
                 reqs, bucket, spec.char_shape,
-                np.dtype(jnp.dtype(spec.char_dtype).name))
+                np.dtype(jnp.dtype(spec.char_dtype).name), block)
             if sharded_fn is not None:
                 out = sharded_fn(params, jnp.asarray(qs), jnp.asarray(rs),
                                  jnp.asarray(ql), jnp.asarray(rl))
             else:
                 plan = plan_mod.get_plan(
                     spec, self.engine_name, qs.shape[1:], rs.shape[1:],
-                    batch_size=self.block,
+                    batch_size=block,
                     with_traceback=self.with_traceback and
                     spec.traceback is not None,
                     donate=True)
@@ -284,6 +351,7 @@ class AlignmentService:
                 end_j = np.asarray(out.end_j)
                 moves = n_moves = None
                 if getattr(out, "moves", None) is not None:
+                    raise_if_truncated(out)  # never emit a corrupt path
                     moves = np.asarray(out.moves)
                     n_moves = np.asarray(out.n_moves)
                 for i, (r, gen) in enumerate(zip(ib.reqs, ib.gens)):

@@ -1,0 +1,33 @@
+"""bench_fill gates: quick parity in tier-1, full GCUPS sweep as slow."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import bench_fill  # noqa: E402
+
+
+def test_quick_parity_and_memory_headline():
+    """--quick mode: bit-identity asserts + the >= 2x in-flight batch
+    claim (the GCUPS cells are reported, not asserted, in quick mode)."""
+    metrics = bench_fill.run(quick=True)
+    assert metrics["cells"], "no timed cells"
+    assert metrics["mem"]["global_linear"]["batch_ratio"] >= 4.0
+    assert metrics["mem"]["global_affine"]["batch_ratio"] >= 2.0
+
+
+@pytest.mark.slow
+def test_full_gcups_sweep_meets_targets():
+    """Full engine x bucket x batch sweep: the optimized path must beat
+    the unpacked K=1 seed somewhere at bucket <= 512.
+
+    The committed baseline (BENCH_fill.json) records ~1.33x best on an
+    idle 2-core CPU host; the in-test gate is deliberately looser (the
+    shared CI host is noisy) — it catches regressions where the
+    optimized path stops winning at all, not run-to-run variance."""
+    metrics = bench_fill.run(quick=False)
+    assert metrics["best_speedup_bucket_le_512"] >= 1.1, metrics["cells"]

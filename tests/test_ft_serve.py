@@ -95,7 +95,7 @@ def test_redispatch_discards_late_original_result(rng):
                        rng.integers(0, 4, 12).astype(np.uint8),
                        rng.integers(0, 4, 12).astype(np.uint8))
     # launch on w1 for real (device output pending), then w1 goes dead
-    item = ("global_affine", (16, 16), [req], False)
+    item = ("global_affine", (16, 16), [req], False, svc.block)
     stale = svc._launch("w1", item)
     svc.monitor._last["w1"] = 0.0                   # silence its heartbeat
     assert svc.redispatch_dead(now=100.0) == 1      # requeued, gen bumped

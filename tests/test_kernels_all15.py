@@ -64,6 +64,51 @@ def test_path_rescores_to_score(kid, engine, rng):
         f"path rescored to {got}, engine reported {float(a.score)}")
 
 
+@pytest.mark.parametrize("kid", ALL_KERNELS)
+def test_packed_strip_fill_bit_identical_to_seed(kid, rng):
+    """The optimized hot path — bit-packed traceback, strip-mined /
+    early-exit fill, batched traceback walk — must produce bit-identical
+    (score, start, end, moves) vs the seed schedule (strip=1, one byte
+    per pointer, full-bucket fill) for every zoo kernel."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.runtime import plan as plan_mod, registry
+
+    spec, params = kernels_zoo.make(kid)
+    B, bucket = 5, 64
+    qs = jnp.stack([make_kernel_inputs(rng, spec, bucket, bucket)[0]
+                    for _ in range(B)])
+    rs = jnp.stack([make_kernel_inputs(rng, spec, bucket, bucket)[1]
+                    for _ in range(B)])
+    ql = jnp.asarray(rng.integers(4, bucket + 1, B), jnp.int32)
+    rl = jnp.asarray(rng.integers(4, bucket + 1, B), jnp.int32)
+    if spec.band is not None:
+        rl = ql                      # keep the corner inside the band
+
+    # the seed executable: unpacked, one diagonal per step, no early
+    # exit, per-row while-loop traceback under vmap
+    engine_fn = functools.partial(registry.get_engine("wavefront"),
+                                  strip=1, tb_pack=1, live_bound=2 * bucket)
+    seed = jax.jit(jax.vmap(
+        functools.partial(plan_mod.align_impl, spec, engine_fn),
+        in_axes=(None, 0, 0, 0, 0)))
+    char = spec.char_shape
+    opt = plan_mod.get_plan(spec, "wavefront", (bucket,) + char,
+                            (bucket,) + char, batch_size=B)
+
+    a = seed(params, qs, rs, ql, rl)
+    b = opt(params, qs, rs, ql, rl)
+    fields = ["score", "end_i", "end_j"]
+    if spec.traceback is not None:
+        fields += ["start_i", "start_j", "n_moves", "moves"]
+        assert not np.asarray(b.truncated).any()
+    for f in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{spec.name}: {f}")
+
+
 def test_local_score_nonnegative(rng):
     spec, params = kernels_zoo.make(3)
     q, r = make_kernel_inputs(rng, spec, 16, 16)

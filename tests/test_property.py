@@ -96,6 +96,32 @@ def test_identity_is_optimal_global(q):
 
 
 @SETTINGS
+@given(q=dna_seq, r=dna_seq,
+       strip=st.integers(1, 9),
+       pack=st.sampled_from([1, 2, 4]),
+       bucket=st.sampled_from([16, 32, 64]))
+def test_packed_strip_plan_matches_seed(q, r, strip, pack, bucket):
+    """Any (tb_pack, strip, bucket) combo the plan cache accepts yields
+    bit-identical alignments to the unpacked strip=1 plan."""
+    from repro.runtime import plan as plan_mod
+    spec = dna_linear.global_linear()          # 2-bit pointers: any pack
+    params = dna_linear.default_params()
+    ql, rl = min(len(q), bucket), min(len(r), bucket)
+    qp = jnp.zeros((bucket,), jnp.uint8).at[:ql].set(q[:ql])
+    rp = jnp.zeros((bucket,), jnp.uint8).at[:rl].set(r[:rl])
+    p_seed = plan_mod.get_plan(spec, "wavefront", (bucket,), (bucket,),
+                               strip=1, tb_pack=1)
+    p_opt = plan_mod.get_plan(spec, "wavefront", (bucket,), (bucket,),
+                              strip=strip, tb_pack=pack)
+    a = p_seed(params, qp, rp, ql, rl)
+    b = p_opt(params, qp, rp, ql, rl)
+    for f in ("score", "end_i", "end_j", "start_i", "start_j",
+              "n_moves", "moves"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+@SETTINGS
 @given(data=st.data())
 def test_int8_quantization_roundtrip(data):
     """Optimizer moment quantization: bounded relative error."""

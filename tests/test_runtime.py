@@ -245,6 +245,76 @@ def test_tb_reader_layout_parity(Q, R, n_pe, rng):
             assert got["chunk"] == got["row"] == got["diag"], (i, j, got)
 
 
+@pytest.mark.parametrize("pack", [2, 4])
+def test_packed_tb_readers_match_unpacked(pack, rng):
+    """The ('diag', pack) and ('chunk', n_pe, pack) readers must decode
+    the lane-packed store to exactly the unpacked pointer values."""
+    import jax.numpy as jnp
+    from repro.core.traceback import pack_lanes
+    Q, R, n_pe = 9, 11, 4
+    width = 8 // pack
+    diag = np.zeros((Q + R, Q + 1), np.uint8)
+    chunk = np.zeros((-(-Q // n_pe), n_pe, n_pe + R - 1), np.uint8)
+    rngv = rng.integers(0, 1 << width, (Q, R)).astype(np.uint8)
+    for i in range(1, Q + 1):
+        for j in range(1, R + 1):
+            diag[i + j - 1, i] = rngv[i - 1, j - 1]
+            c, lane = (i - 1) // n_pe, (i - 1) % n_pe
+            chunk[c, lane, lane + j - 1] = rngv[i - 1, j - 1]
+    diag_p = np.asarray(pack_lanes(jnp.asarray(diag), pack))
+    chunk_p = np.asarray(pack_lanes(
+        jnp.moveaxis(jnp.asarray(chunk), 1, -1), pack))
+    chunk_p = np.moveaxis(chunk_p, -1, 1)
+    readers = {
+        "diag": _make_reader(jnp.asarray(diag), "diag"),
+        "diag_p": _make_reader(jnp.asarray(diag_p), ("diag", pack)),
+        "chunk_p": _make_reader(jnp.asarray(chunk_p), ("chunk", n_pe, pack)),
+    }
+    for i in range(1, Q + 1):
+        for j in range(1, R + 1):
+            got = {k: int(f(i, j)) for k, f in readers.items()}
+            assert got["diag_p"] == got["chunk_p"] == got["diag"], (i, j, got)
+
+
+def test_plan_cache_keys_schedule_options(rng):
+    """strip/tb_pack join the cache key: explicit seed knobs and the
+    defaults compile distinct executables; defaults are deterministic."""
+    spec, params = kernels_zoo.make("global_linear")
+    plan_mod.clear_plan_cache()
+    p_dflt = plan_mod.get_plan(spec, "wavefront", (16,), (16,))
+    p_dflt2 = plan_mod.get_plan(spec, "wavefront", (16,), (16,))
+    p_seed = plan_mod.get_plan(spec, "wavefront", (16,), (16,),
+                               strip=1, tb_pack=1)
+    assert p_dflt is p_dflt2
+    assert p_dflt.key.tb_pack == spec.tb_pack == 4
+    assert (p_seed.key.strip, p_seed.key.tb_pack) == (1, 1)
+    if p_dflt.key.strip == 1 and p_dflt.key.tb_pack == 1:
+        assert p_dflt is p_seed
+    else:
+        assert p_dflt is not p_seed
+    with pytest.raises(ValueError, match="tb_pack"):
+        plan_mod.get_plan(spec, "wavefront", (16,), (16,), tb_pack=3)
+    # affine pointers need 4 bits: pack 4 leaves 2-bit slots
+    spec_a, _ = kernels_zoo.make("global_affine")
+    with pytest.raises(ValueError, match="tb_pack"):
+        plan_mod.get_plan(spec_a, "wavefront", (16,), (16,), tb_pack=4)
+
+
+def test_traceback_bytes_estimator():
+    """Packed stores shrink by the kernel's tb_pack; score-only kernels
+    occupy nothing."""
+    spec_l, _ = kernels_zoo.make("global_linear")    # 2-bit -> pack 4
+    spec_a, _ = kernels_zoo.make("global_affine")    # 4-bit -> pack 2
+    spec_v, _ = kernels_zoo.make("viterbi_pairhmm")  # no traceback
+    seed_l = plan_mod.traceback_bytes(spec_l, 256, 256, strip=1, tb_pack=1)
+    opt_l = plan_mod.traceback_bytes(spec_l, 256, 256, strip=1)
+    opt_a = plan_mod.traceback_bytes(spec_a, 256, 256, strip=1)
+    assert seed_l == 512 * 257
+    assert seed_l / opt_l == pytest.approx(4.0, rel=0.05)
+    assert seed_l / opt_a == pytest.approx(2.0, rel=0.05)
+    assert plan_mod.traceback_bytes(spec_v, 256, 256) == 0
+
+
 # ---------------------------------------------------------------------------
 # service: per-(kernel, bucket) padding instead of one global max_len
 # ---------------------------------------------------------------------------
@@ -318,3 +388,37 @@ def test_service_coalescing_off_keeps_per_bucket_batches(rng):
     assert svc.drain() == 6
     assert len(svc.dispatches) == 3
     assert all(not d["coalesced"] for d in svc.dispatches)
+
+
+def test_service_budget_sized_blocks(rng):
+    """With a traceback-memory budget the service launches as many
+    alignments per bucket as the packed store admits — one big batch
+    instead of many fixed-size ones — and results stay correct."""
+    from repro.serve import AlignRequest, AlignmentService  # noqa: F811
+    import jax.numpy as jnp
+    spec, params = kernels_zoo.make("global_affine")
+    per = plan_mod.traceback_bytes(spec, 16, 16)
+    svc = AlignmentService(max_len=64, block=2, coalesce=False,
+                           tb_budget_bytes=8 * per, max_block=16)
+    assert svc.block_for("global_affine", (16, 16)) == 8
+    # the same budget admits fewer rows at a bigger bucket ...
+    assert svc.block_for("global_affine", (64, 64)) < 8
+    # ... and pack-4 linear kernels get more rows than pack-2 affine
+    per_l = plan_mod.traceback_bytes(
+        kernels_zoo.make("global_linear")[0], 16, 16)
+    assert svc.block_for("global_linear", (16, 16)) >= \
+        svc.block_for("global_affine", (16, 16))
+    assert per_l < per
+    reqs = [AlignRequest(rid=i, kernel="global_affine",
+                         query=rng.integers(0, 4, 12).astype(np.uint8),
+                         ref=rng.integers(0, 4, 12).astype(np.uint8))
+            for i in range(8)]
+    for r in reqs:
+        svc.submit(r)
+    assert svc.drain() == 8
+    assert len(svc.dispatches) == 1           # one budget-sized launch
+    assert svc.dispatches[0]["n"] == 8
+    for req in reqs:
+        direct = align(spec, params, jnp.asarray(req.query),
+                       jnp.asarray(req.ref), with_traceback=False)
+        assert req.result["score"] == pytest.approx(float(direct.score))
