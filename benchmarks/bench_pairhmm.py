@@ -1,0 +1,121 @@
+"""Pair-HMM forward GCUPS + genotyping throughput (the sum-semiring path).
+
+Three measurements, all through the shared CompiledPlan cache:
+
+* **parity gate** — before timing anything, the forward likelihood is
+  asserted against the exhaustive path-enumeration oracle on tiny pairs
+  and against the reference engine at a real size (the logsumexp
+  analogue of bench_fill's bit-identity gate);
+* **forward GCUPS** — batched score-only fills per bucket (cell updates
+  per second over the actual ``q_len * r_len`` cells): the raw
+  read-x-haplotype evidence rate a genotyper sustains;
+* **genotyping throughput** — end-to-end sites/sec through
+  ``serve.GenotypingService`` (pipelined dispatch) on synthetic
+  ``data.synthetic.sample_site`` scenarios, with every call checked
+  against the true genotype.
+
+Headline dict (``--json``): ``forward_gcups`` per bucket,
+``sites_per_sec``, ``pairs_per_sec`` and the oracle parity error.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import align
+from repro.data.synthetic import sample_site
+from repro.prob import cached_pairhmm, default_params
+from repro.serve import GenotypeRequest, GenotypingService
+
+from .common import batched_plan, emit, timeit
+
+
+def _oracle_gate(params) -> float:
+    """Max |forward - enumeration oracle| over a few tiny pairs."""
+    from repro.prob import oracle_forward
+    rng = np.random.default_rng(0)
+    spec = cached_pairhmm()
+    worst = 0.0
+    for _ in range(4):
+        nq, nr = int(rng.integers(2, 5)), int(rng.integers(2, 6))
+        q = rng.integers(0, 4, nq).astype(np.uint8)
+        r = rng.integers(0, 4, nr).astype(np.uint8)
+        want = oracle_forward(params, q, r)
+        got = float(align(spec, params, q, r, engine_name="wavefront",
+                          with_traceback=False).score)
+        worst = max(worst, abs(got - want) / max(1.0, abs(want)))
+    assert worst < 1e-4, f"oracle parity broken: rel err {worst}"
+    return worst
+
+
+def _reference_gate(params, bucket: int) -> None:
+    rng = np.random.default_rng(1)
+    spec = cached_pairhmm()
+    q = rng.integers(0, 4, bucket).astype(np.uint8)
+    r = rng.integers(0, 4, bucket).astype(np.uint8)
+    a = float(align(spec, params, q, r, engine_name="reference",
+                    with_traceback=False).score)
+    b = float(align(spec, params, q, r, engine_name="wavefront",
+                    with_traceback=False).score)
+    assert abs(a - b) <= 2e-5 * max(1.0, abs(a)), (a, b)
+
+
+def run(quick: bool = False) -> dict:
+    params = default_params()
+    spec = cached_pairhmm()
+    parity = _oracle_gate(params)
+    _reference_gate(params, 48 if quick else 96)
+    emit("pairhmm_parity_gate", 0.0, f"rel_err={parity:.2e}")
+
+    rng = np.random.default_rng(2)
+    buckets = [64, 128] if quick else [64, 128, 256, 512]
+    batch = 8 if quick else 16
+    gcups: dict = {}
+    for bucket in buckets:
+        plan = batched_plan(spec, batch, bucket, bucket,
+                            with_traceback=False)
+        lens = rng.integers(bucket // 2 + 1, bucket + 1, batch)
+        qs = np.zeros((batch, bucket), np.uint8)
+        rs = np.zeros((batch, bucket), np.uint8)
+        for i, n in enumerate(lens):
+            qs[i, :n] = rng.integers(0, 4, n)
+            rs[i, :n] = rng.integers(0, 4, n)
+        ql = rl = np.asarray(lens, np.int32)
+        t = timeit(plan, params, qs, rs, ql, rl,
+                   warmup=1 if quick else 2, iters=3 if quick else 5)
+        cells = float((lens.astype(np.int64) ** 2).sum())
+        gcups[bucket] = cells / t / 1e9
+        emit(f"pairhmm_forward_b{bucket}", t / batch,
+             f"{gcups[bucket]:.3f} GCUPS")
+
+    # genotyping throughput (sites/sec through the pipelined service)
+    n_sites = 4 if quick else 16
+    n_reads, hap_len, read_len = (6, 48, 24) if quick else (10, 96, 48)
+    svc = GenotypingService(max_len=hap_len, block=8, pipeline_depth=2)
+    sites = []
+    for k in range(n_sites):
+        gt = [(0, 0), (0, 1), (1, 1)][k % 3]
+        sites.append(sample_site(seed=k, hap_len=hap_len,
+                                 read_len=read_len, n_reads=n_reads,
+                                 genotype=gt, error_rate=0.01))
+    futs = [svc.submit(GenotypeRequest(rid=k, reads=s.reads,
+                                       haplotypes=s.haplotypes))
+            for k, s in enumerate(sites)]
+    t0 = time.perf_counter()
+    svc.drain()          # harvest's np.asarray(score) is the device sync
+    elapsed = time.perf_counter() - t0
+    correct = sum(1 for s, f in zip(sites, futs)
+                  if f.result()["GT"] == s.genotype)
+    assert correct == n_sites, f"genotype calls wrong: {correct}/{n_sites}"
+    sites_per_sec = n_sites / elapsed
+    pairs_per_sec = n_sites * n_reads * 2 / elapsed
+    emit("genotyping_service", elapsed / n_sites,
+         f"{sites_per_sec:.1f} sites/s, {pairs_per_sec:.0f} pair-lls/s, "
+         f"{correct}/{n_sites} correct")
+
+    return {"parity_rel_err": parity,
+            "forward_gcups": {str(b): g for b, g in gcups.items()},
+            "sites_per_sec": sites_per_sec,
+            "pairs_per_sec": pairs_per_sec,
+            "genotype_accuracy": correct / n_sites}

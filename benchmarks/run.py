@@ -16,7 +16,7 @@ import traceback
 from . import (bench_kernels_table2, bench_scaling_fig3,
                bench_vs_handcoded_fig45, bench_vs_software_fig6,
                bench_vs_naive_hls, bench_tiling, bench_bucketing,
-               bench_mapping, bench_serving, bench_fill)
+               bench_mapping, bench_serving, bench_fill, bench_pairhmm)
 
 SUITES = [
     ("Table 2 (15 kernels)", bench_kernels_table2),
@@ -29,6 +29,7 @@ SUITES = [
     ("Read mapping (seed-and-extend)", bench_mapping),
     ("Serving (sync vs pipelined drain)", bench_serving),
     ("Fill (strip-mined + packed tb)", bench_fill),
+    ("Pair-HMM (forward + genotyping)", bench_pairhmm),
 ]
 
 

@@ -1,0 +1,69 @@
+"""Genotyping quickstart: pair-HMM forward likelihoods -> genotype calls.
+
+The probabilistic subsystem generalizes the DP engines over a semiring:
+the same wavefront back-end that maximizes alignment scores accumulates
+log-sum-exp path mass, turning it into the GATK-style pair-HMM forward
+kernel.  This example simulates three variant sites (hom-ref, het,
+hom-alt), computes every read x haplotype likelihood through the
+batched runtime, calls genotypes with phred-scaled confidence, and runs
+the same sites through the pipelined ``GenotypingService`` channel.
+
+Run:  PYTHONPATH=src python examples/genotyping.py
+"""
+import time
+
+import numpy as np
+
+from repro.data.synthetic import sample_site
+from repro.prob import call_site, forward_backward, default_params
+from repro.runtime import plan as plan_mod
+from repro.serve import GenotypeRequest, GenotypingService
+
+GT_NAMES = {(0, 0): "0/0 hom-ref", (0, 1): "0/1 het", (1, 1): "1/1 hom-alt"}
+
+
+def main():
+    # -- direct pipeline: one site at a time --------------------------------
+    print("# direct call_site:")
+    sites = []
+    for k, truth in enumerate([(0, 0), (0, 1), (1, 1)]):
+        site = sample_site(seed=k, hap_len=96, read_len=48, n_reads=10,
+                           genotype=truth, error_rate=0.02)
+        sites.append(site)
+        out = call_site(site.reads, site.haplotypes)
+        status = "OK" if out["GT"] == truth else "WRONG"
+        print(f"  site {k}: truth={GT_NAMES[truth]:>12}  "
+              f"called={GT_NAMES[out['GT']]:>12}  GQ={out['GQ']:>2}  "
+              f"PL={out['PL']}  [{status}]")
+
+    # -- posterior decoding: where does read 0 sit on the ref allele? -------
+    site = sites[1]
+    post = forward_backward(default_params(), site.reads[0],
+                            site.haplotypes[0])
+    print(f"# posterior: logZ={post.log_z:.2f} "
+          f"(backward check {post.log_z_backward:.2f}); "
+          f"read 0 MAP path covers hap "
+          f"[{post.map_path.min()}, {post.map_path.max()}]")
+
+    # -- the serving channel: all sites through the pipelined dispatcher ----
+    svc = GenotypingService(max_len=128, block=8, pipeline_depth=2,
+                            max_pending=64, backpressure="block")
+    futs = [svc.submit(GenotypeRequest(rid=k, reads=s.reads,
+                                       haplotypes=s.haplotypes))
+            for k, s in enumerate(sites)]
+    t0 = time.perf_counter()
+    svc.drain()
+    dt = time.perf_counter() - t0
+    calls = [f.result()["GT"] for f in futs]
+    truths = [s.genotype for s in sites]
+    print(f"# GenotypingService: {len(futs)} sites in {dt * 1e3:.0f} ms, "
+          f"calls={calls}, all correct: {calls == truths}")
+
+    sums = [k for k in plan_mod.plan_cache_info()["keys"]
+            if k.semiring == "logsumexp"]
+    print(f"# sum-semiring plans in the shared cache: {len(sums)}")
+    assert calls == truths
+
+
+if __name__ == "__main__":
+    main()

@@ -14,3 +14,4 @@ python -m benchmarks.run --quick --only bucketing
 python -m benchmarks.run --quick --only mapping
 python -m benchmarks.run --quick --only serving
 python -m benchmarks.run --quick --only fill   # packed/strip parity gate
+python -m benchmarks.run --quick --only pairhmm  # forward-oracle parity gate

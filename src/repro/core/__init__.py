@@ -10,12 +10,15 @@ from .types import (Alignment, DPKernelSpec, DPResult, TracebackSpec,
                     REGION_LAST_ROW_COL, STOP_EDGE, STOP_ORIGIN,
                     STOP_PTR_END, STOP_TOP_ROW)
 from .api import align, fill, score_only
-from . import alphabets, kernels_zoo, traceback
+from .semiring import LOG_SUM_EXP, MAX_PLUS, MIN_PLUS, Semiring
+from . import alphabets, kernels_zoo, semiring, traceback
 
 __all__ = [
     "Alignment", "DPKernelSpec", "DPResult", "TracebackSpec",
     "MOVE_DIAG", "MOVE_END", "MOVE_LEFT", "MOVE_UP",
     "REGION_ALL", "REGION_CORNER", "REGION_LAST_ROW", "REGION_LAST_ROW_COL",
     "STOP_EDGE", "STOP_ORIGIN", "STOP_PTR_END", "STOP_TOP_ROW",
-    "align", "fill", "score_only", "alphabets", "kernels_zoo", "traceback",
+    "LOG_SUM_EXP", "MAX_PLUS", "MIN_PLUS", "Semiring",
+    "align", "fill", "score_only", "alphabets", "kernels_zoo", "semiring",
+    "traceback",
 ]

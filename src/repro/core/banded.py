@@ -84,12 +84,17 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None,
         from .spec_utils import region_mask
         rmask = region_mask(spec, i, j, q_len, r_len)
         cand = jnp.where(rmask, newbuf[:, spec.primary_layer], sent)
-        lane_best = spec.reduce_best(cand)
-        lane_arg = spec.arg_best(cand).astype(jnp.int32)
-        upd = spec.better(lane_best, best)
-        best = jnp.where(upd, lane_best, best)
-        bi = jnp.where(upd, b + lane_arg, bi)
-        bj = jnp.where(upd, d - (b + lane_arg), bj)
+        if spec.is_sum:
+            # sum semiring: fold this diagonal's region mass into the
+            # running total (end cells stay 0 — no path meaning)
+            best = spec.combine(best, spec.reduce_best(cand))
+        else:
+            lane_best = spec.reduce_best(cand)
+            lane_arg = spec.arg_best(cand).astype(jnp.int32)
+            upd = spec.better(lane_best, best)
+            best = jnp.where(upd, lane_best, best)
+            bi = jnp.where(upd, b + lane_arg, bi)
+            bj = jnp.where(upd, d - (b + lane_arg), bj)
         return (prev, newbuf, best, bi, bj), None
 
     # d=0: only cell (0,0), at lane 0 (base(0)=0)

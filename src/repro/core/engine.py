@@ -136,7 +136,7 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
         newbuf = jnp.where(on_col0[:, None], col0, newbuf)
 
         # §5.2 local-max bookkeeping over the objective region.
-        if spec.region == T.REGION_CORNER:
+        if spec.region == T.REGION_CORNER and not spec.is_sum:
             # the region is the single cell (q_len, r_len) on diagonal
             # q_len + r_len: capture it directly instead of reducing +
             # arg-reducing the whole lane vector every step (bit-
@@ -150,6 +150,15 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
             best = jnp.where(upd, cell, best)
             bi = jnp.where(upd, q_len, bi)
             bj = jnp.where(upd, r_len, bj)
+        elif spec.is_sum:
+            # sum semiring: ⊕-accumulate the whole region's mass across
+            # wavefronts (this diagonal's logsumexp folded into the
+            # running total).  Sentinel candidates underflow bit-exactly,
+            # so dead diagonals are no-ops; end cells carry no path
+            # meaning under a sum and stay 0.
+            rmask = region_mask(spec, i_idx, j, q_len, r_len)
+            cand = jnp.where(rmask, newbuf[:, spec.primary_layer], sent)
+            best = spec.combine(best, spec.reduce_best(cand))
         else:
             rmask = region_mask(spec, i_idx, j, q_len, r_len)
             cand = jnp.where(rmask, newbuf[:, spec.primary_layer], sent)

@@ -40,6 +40,22 @@ def local_affine(**kw) -> T.DPKernelSpec:
         traceback=C.affine_tb(T.STOP_PTR_END), ptr_bits=C.AFFINE_PTR_BITS, **kw)
 
 
+def semiglobal_affine(**kw) -> T.DPKernelSpec:
+    """Semi-global Gotoh: query end-to-end vs a reference substring with
+    affine gaps — the 'fit' alignment the read mapper's extension stage
+    uses under ``gap_mode='affine'`` (a long indel pays one open plus
+    cheap extends instead of the linear per-base cost).  Row 0 is the
+    free start along the reference (zero H, dead gap layers — the same
+    boundary as the local kernels)."""
+    return T.DPKernelSpec(
+        name="semiglobal_affine", n_layers=3,
+        pe=C.affine_pe(C.dna_sub),
+        init_row=_local_zero_init, init_col=C.affine_init_col,
+        region=T.REGION_LAST_ROW,
+        traceback=C.affine_tb(T.STOP_TOP_ROW), ptr_bits=C.AFFINE_PTR_BITS,
+        **kw)
+
+
 def banded_local_affine(band: int = 16, **kw) -> T.DPKernelSpec:
     """#12 Banded SWG, score-only (minimap2 extension stage; no traceback)."""
     return T.DPKernelSpec(

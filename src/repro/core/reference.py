@@ -70,6 +70,13 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None) -> T.D
     jj = jnp.arange(R + 1, dtype=jnp.int32)[None, :]
     mask = region_mask(spec, ii, jj, q_len, r_len)
     cand = jnp.where(mask, prim, spec.sentinel())
+    if spec.is_sum:
+        # sum semiring: the score is the ⊕-fold (logsumexp) of the whole
+        # objective region — no arg-best cell exists (end cells carry no
+        # path meaning and are reported as 0, matching the wavefront).
+        return T.DPResult(score=spec.reduce_best(cand.reshape(-1)),
+                          end_i=jnp.int32(0), end_j=jnp.int32(0),
+                          tb=tb, tb_layout="row", matrix=scores)
     flat = spec.arg_best(cand.reshape(-1))
     best_i = (flat // (R + 1)).astype(jnp.int32)
     best_j = (flat % (R + 1)).astype(jnp.int32)

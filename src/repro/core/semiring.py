@@ -1,0 +1,77 @@
+"""Scoring semirings: the algebra a DP kernel accumulates paths under.
+
+The paper's kernel space spans *optimization* DP (alignment scores —
+pick the best path) and *probabilistic* DP (basecalling, gene
+annotation — sum the mass of every path).  Both run the identical
+recurrence template; only the path-combination operator ⊕ changes:
+
+  * max-plus  — ⊕ = max:        Needleman-Wunsch, Smith-Waterman,
+    Viterbi; the optimum path is recoverable (``selective``).
+  * min-plus  — ⊕ = min:        the DTW family (cost minimization).
+  * log-sum-exp — ⊕ = logaddexp: pair-HMM forward / posterior family;
+    scores are log-probabilities and every cell holds the *total* mass
+    of all paths into it.  No single path exists to trace back.
+
+``⊗`` is ``+`` in every case (log-space products), so a PE function
+written against ``semiring.combine`` specializes across all three —
+the AnySeq observation, realized on the shared back-ends.
+
+Numerical note: the additive identity ("zero" — an unreachable cell) is
+the engines' large-magnitude sentinel, not an actual ``-inf``.  At
+float32, ``logaddexp(-1e30, x)`` underflows to exactly ``x`` and
+``logaddexp(-1e30, -1e30) = -1e30 + log 2`` rounds back to ``-1e30``
+(ulp(1e30) ~ 1e23), so sentinel cells are absorbed bit-exactly without
+the NaN hazards of ``inf - inf``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _logsumexp(x, axis=None):
+    return jax.nn.logsumexp(x, axis=axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """One path-combination algebra.
+
+    ``combine`` is the binary ⊕ applied between incoming paths inside a
+    PE function; ``reduce``/``arg`` fold ⊕ over an axis (the back-ends'
+    region reduction).  ``selective`` is True when ⊕ returns one of its
+    operands — i.e. an arg-best cell exists and traceback is meaningful.
+    Sum semirings accumulate instead: engines ⊕-fold the whole objective
+    region and the end-cell fields of the result carry no path meaning.
+    """
+    name: str
+    combine: Callable[[Any, Any], Any]
+    reduce: Callable[..., Any]
+    arg: Callable[..., Any]
+    selective: bool
+
+    def __repr__(self):
+        return f"Semiring({self.name})"
+
+
+MAX_PLUS = Semiring("maxplus", jnp.maximum, jnp.max, jnp.argmax,
+                    selective=True)
+MIN_PLUS = Semiring("minplus", jnp.minimum, jnp.min, jnp.argmin,
+                    selective=True)
+LOG_SUM_EXP = Semiring("logsumexp", jnp.logaddexp, _logsumexp, jnp.argmax,
+                       selective=False)
+
+# DPKernelSpec.objective -> semiring (the objective string stays the
+# spec-level declaration so existing max/min kernels are untouched).
+BY_OBJECTIVE = {"max": MAX_PLUS, "min": MIN_PLUS, "logsumexp": LOG_SUM_EXP}
+
+
+def from_objective(objective: str) -> Semiring:
+    sr = BY_OBJECTIVE.get(objective)
+    if sr is None:
+        raise ValueError(
+            f"unknown objective {objective!r}; have {sorted(BY_OBJECTIVE)}")
+    return sr

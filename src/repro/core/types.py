@@ -11,6 +11,8 @@ from typing import Any, Callable, Optional
 
 import jax.numpy as jnp
 
+from . import semiring as semiring_mod
+
 # ---------------------------------------------------------------------------
 # Traceback moves (alignment operations).  These are the AL_* codes of the
 # paper's Listing 7: a move consumes characters from one or both sequences.
@@ -81,7 +83,12 @@ class DPKernelSpec:
       * ``traceback``: the FSM (steps 4-5) or ``None`` (no-traceback kernels).
       * ``band``: fixed banding width W, cells with |i - j| > W pruned
         (step 6).  ``None`` disables banding.
-      * ``objective``: 'max' or 'min' (DTW-family minimizes).
+      * ``objective``: 'max', 'min' (DTW-family minimizes), or
+        'logsumexp' — the sum semiring: scores are log-probabilities,
+        cells hold total path mass, and the region reduction
+        ⊕-accumulates instead of selecting (forward/posterior kernels;
+        see ``repro.core.semiring``).  Sum kernels are score-only (no
+        single path exists) and require a floating score dtype.
       * ``region``: where the optimum is searched / traceback starts.
       * ``ptr_bits``: significant low bits in the traceback pointer the PE
         emits (the paper's per-kernel pointer width: 2 for linear-gap
@@ -108,6 +115,27 @@ class DPKernelSpec:
     def __post_init__(self):
         if not 1 <= self.ptr_bits <= 8:
             raise ValueError(f"ptr_bits must be in [1, 8], got {self.ptr_bits}")
+        sr = semiring_mod.from_objective(self.objective)  # validates
+        if not sr.selective:
+            if not jnp.issubdtype(jnp.dtype(self.score_dtype), jnp.floating):
+                raise ValueError(
+                    f"kernel {self.name}: sum semiring ({self.objective}) "
+                    f"requires a floating score_dtype, got {self.score_dtype}")
+            if self.traceback is not None:
+                raise ValueError(
+                    f"kernel {self.name}: sum-semiring cells hold total "
+                    "path mass — no single path exists to trace back")
+
+    @property
+    def semiring(self) -> semiring_mod.Semiring:
+        """The path-combination algebra declared by ``objective``."""
+        return semiring_mod.from_objective(self.objective)
+
+    @property
+    def is_sum(self) -> bool:
+        """True for sum semirings (log-sum-exp accumulation): the region
+        reduction ⊕-folds all mass and end cells carry no path meaning."""
+        return not self.semiring.selective
 
     @property
     def tb_pack(self) -> int:
@@ -135,10 +163,18 @@ class DPKernelSpec:
         return (a < b) if self.is_min else (a > b)
 
     def reduce_best(self, x, axis=None):
-        return jnp.min(x, axis=axis) if self.is_min else jnp.max(x, axis=axis)
+        """⊕-fold over an axis: min/max for selective semirings, a
+        numerically stable logsumexp for the sum semiring."""
+        return self.semiring.reduce(x, axis=axis)
 
     def arg_best(self, x, axis=None):
-        return jnp.argmin(x, axis=axis) if self.is_min else jnp.argmax(x, axis=axis)
+        return self.semiring.arg(x, axis=axis)
+
+    def combine(self, a, b):
+        """The semiring ⊕ of two path masses (``maximum``/``minimum``/
+        ``logaddexp``) — what the engines' running-region accumulators
+        and semiring-generic PE functions apply."""
+        return self.semiring.combine(a, b)
 
 
 import jax  # noqa: E402  (pytree registration for jit/vmap boundaries)

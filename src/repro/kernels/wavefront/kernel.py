@@ -123,12 +123,18 @@ def _kernel_body(spec, n_pe, tb_pack, treedef, leaf_shapes,
             pl.store(row_buf, (pl.ds(jnp.clip(j_last, 0, R), 1), slice(None)),
                      cur[n_pe - 1][None])
 
-        # per-PE local best over the objective region (§5.2)
+        # per-PE local best over the objective region (§5.2); under a
+        # sum semiring each lane ⊕-accumulates its region mass instead
+        # (sentinel candidates underflow to no-ops) and the host-side
+        # reduction logsumexps the lanes
         rmask = region_mask(spec, i_glob, j, q_len, r_len)
         cand = jnp.where(rmask, cur[:, spec.primary_layer], sent)
-        upd = spec.better(cand, best_v)
-        best_v = jnp.where(upd, cand, best_v)
-        bestj_v = jnp.where(upd, j, bestj_v)
+        if spec.is_sum:
+            best_v = spec.combine(best_v, cand)
+        else:
+            upd = spec.better(cand, best_v)
+            best_v = jnp.where(upd, cand, best_v)
+            bestj_v = jnp.where(upd, j, bestj_v)
         return prev, cur, r_stream, best_v, bestj_v
 
     init = (jnp.full((n_pe, L), sent, dt), jnp.full((n_pe, L), sent, dt),

@@ -34,6 +34,13 @@ def run(spec, params, query, ref, q_len=None, r_len=None,
                                         n_pe=n_pe, interpret=interpret,
                                         tb_pack=pack)
     flat = best.reshape(-1)
+    if spec.is_sum:
+        # sum semiring: per-lane accumulators hold partial region mass;
+        # the cross-strip reduction is the ⊕-fold (dead lanes underflow)
+        layout = ("chunk", n_pe) if pack == 1 else ("chunk", n_pe, pack)
+        return T.DPResult(score=spec.reduce_best(flat),
+                          end_i=jnp.int32(0), end_j=jnp.int32(0),
+                          tb=tb, tb_layout=layout)
     k = spec.arg_best(flat)
     score = flat[k]
     lane = k % n_pe

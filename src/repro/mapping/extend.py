@@ -11,6 +11,13 @@ sizes land as length-bucketed batches on the shared CompiledPlan cache.
 Bands quantize to power-of-two buckets (``bucketing.bucket_length``) so
 the number of distinct kernel specs — and therefore compiled plans —
 stays logarithmic in the observed diagonal spreads.
+
+``gap_mode`` selects the extension scoring: ``'linear'`` (the zoo's
+semiglobal kernel, the default) or ``'affine'`` (semiglobal Gotoh — a
+long indel pays one open plus cheap extends, so reads spanning real
+insertions/deletions keep their placement instead of being shredded by
+the per-base linear cost).  Both modes dispatch through the same plan
+cache; affine plans simply carry three layers and 4-bit packed pointers.
 """
 from __future__ import annotations
 
@@ -19,25 +26,44 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.kernels_zoo import dna_linear
+from repro.core.kernels_zoo import dna_affine, dna_linear
 from repro.runtime import bucketing, dispatch
 
 from . import chain as chain_mod
 from . import sam as sam_mod
 
-# one scoring-param set for every extension band (the mapq/score gates in
-# pipeline.py read the match bonus from here — single source of truth)
+# one scoring-param set per gap mode (the mapq/score gates in pipeline.py
+# read the match bonus via ``match_bonus`` — single source of truth)
 EXTEND_PARAMS = dna_linear.default_params()
+AFFINE_EXTEND_PARAMS = dna_affine.default_params()
 
-# band -> (spec, params); reusing one spec object per band keeps the plan
-# cache keyed correctly (distinct spec constructions never share plans)
-_SPECS: dict[int, tuple] = {}
+GAP_MODES = ("linear", "affine")
+
+# (band, gap_mode) -> (spec, params); reusing one spec object per key
+# keeps the plan cache keyed correctly (distinct spec constructions
+# never share plans)
+_SPECS: dict[tuple, tuple] = {}
 
 
-def extension_spec(band: int):
-    if band not in _SPECS:
-        _SPECS[band] = (dna_linear.semiglobal(band=band), EXTEND_PARAMS)
-    return _SPECS[band]
+def extension_spec(band: int, gap_mode: str = "linear"):
+    key = (band, gap_mode)
+    if key not in _SPECS:
+        if gap_mode == "linear":
+            _SPECS[key] = (dna_linear.semiglobal(band=band), EXTEND_PARAMS)
+        elif gap_mode == "affine":
+            _SPECS[key] = (dna_affine.semiglobal_affine(band=band),
+                           AFFINE_EXTEND_PARAMS)
+        else:
+            raise ValueError(
+                f"unknown gap_mode {gap_mode!r}; have {GAP_MODES}")
+    return _SPECS[key]
+
+
+def match_bonus(gap_mode: str = "linear") -> float:
+    """Per-base match score of a gap mode (drives the extension-score
+    gate in pipeline.py)."""
+    params = AFFINE_EXTEND_PARAMS if gap_mode == "affine" else EXTEND_PARAMS
+    return float(params["match"])
 
 
 @dataclasses.dataclass
@@ -70,7 +96,8 @@ def make_job(ref: np.ndarray, read: np.ndarray, ch: chain_mod.ChainResult,
 
 
 def extend_jobs(jobs: list, *, engine_name: str = "wavefront",
-                block: int = 8, pipeline_depth: int = 2) -> list:
+                block: int = 8, pipeline_depth: int = 2,
+                gap_mode: str = "linear") -> list:
     """Run all extension jobs; returns per-job dicts in input order.
 
     Jobs group by band (one semiglobal spec each), and within a band by
@@ -84,7 +111,7 @@ def extend_jobs(jobs: list, *, engine_name: str = "wavefront",
     for i, job in enumerate(jobs):
         by_band.setdefault(job.band, []).append(i)
     for band, idxs in sorted(by_band.items()):
-        spec, params = extension_spec(band)
+        spec, params = extension_spec(band, gap_mode)
         pairs = [(jobs[i].read, jobs[i].window) for i in idxs]
         outs = dispatch.run_pairs(spec, params, pairs,
                                   engine_name=engine_name, block=block,

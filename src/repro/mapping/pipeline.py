@@ -59,7 +59,7 @@ class ReadMapper:
                  min_chain_score: float = 12.0,
                  min_extend_frac: float = 0.25,
                  engine_name: str = "wavefront", rname: str = "ref",
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2, gap_mode: str = "linear"):
         self.ref = np.asarray(ref, np.uint8)
         self.index = index_mod.build_index(self.ref, k=k, w=w)
         self.margin = margin
@@ -71,6 +71,10 @@ class ReadMapper:
         self.engine_name = engine_name
         self.rname = rname
         self.pipeline_depth = pipeline_depth
+        if gap_mode not in extend_mod.GAP_MODES:
+            raise ValueError(
+                f"unknown gap_mode {gap_mode!r}; have {extend_mod.GAP_MODES}")
+        self.gap_mode = gap_mode
         # reads pad to at least one full minimizer window
         self._read_min_bucket = bucketing.bucket_length(k + w)
         self._seed_chain = jax.jit(functools.partial(
@@ -156,12 +160,13 @@ class ReadMapper:
 
         ext = extend_mod.extend_jobs(jobs, engine_name=self.engine_name,
                                      block=self.block,
-                                     pipeline_depth=self.pipeline_depth)
+                                     pipeline_depth=self.pipeline_depth,
+                                     gap_mode=self.gap_mode)
         for (i, flag, oriented, mapq, f1), res in zip(job_meta, ext):
             # extension-score gate: a true placement scores near
             # match * read_len; impostors (e.g. one spurious anchor) fall
             # far below the fraction threshold
-            match = float(extend_mod.EXTEND_PARAMS["match"])
+            match = extend_mod.match_bonus(self.gap_mode)
             max_score = match * len(oriented)
             if res["score"] < self.min_extend_frac * max_score:
                 records[i] = sam_mod.unmapped(names[i], read_list[i])

@@ -63,6 +63,7 @@ class PlanKey:
     placement: Optional[str] = None  # e.g. 'data@data=8' for sharded plans
     strip: int = 1                   # anti-diagonals per scan step
     tb_pack: int = 1                 # traceback pointers packed per byte
+    semiring: str = "maxplus"        # path algebra: maxplus|minplus|logsumexp
 
 
 class CompiledPlan:
@@ -296,7 +297,8 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
                           bucket_shape=(tuple(q_shape), tuple(r_shape)),
                           batch_size=batch_size, with_traceback=wtb,
                           mode=mode, placement=_placement(mesh, mesh_axis),
-                          strip=strip_r, tb_pack=pack_r)
+                          strip=strip_r, tb_pack=pack_r,
+                          semiring=spec.semiring.name)
             plan = CompiledPlan(key, spec, engine_name, donate=donate,
                                 mesh=mesh, mesh_axis=mesh_axis)
             _CACHE[cache_key] = plan

@@ -1,4 +1,6 @@
 from .engine import Request, ServeSession
 from .alignment_service import (AlignFuture, AlignRequest, AlignmentService,
-                                InflightBatch)
+                                InflightBatch, ServiceOverloaded)
 from .mapping_service import MapRequest, ReadMappingService
+from .genotyping_service import (GenotypeFuture, GenotypeRequest,
+                                 GenotypingService)

@@ -98,6 +98,11 @@ class InflightBatch:
 QueueKey = Tuple[str, Tuple[int, int]]   # (kernel, (q_bucket, r_bucket))
 
 
+class ServiceOverloaded(RuntimeError):
+    """``submit`` under ``backpressure='raise'``: the in-flight budget
+    (``max_pending``) is exhausted — shed the request or retry later."""
+
+
 class AlignmentService:
     """Single-process reference implementation of the dispatch logic.
 
@@ -114,6 +119,16 @@ class AlignmentService:
     most ``max_block``).  Bit-packed pointers cut the per-alignment
     footprint by the kernel's ``tb_pack``, so the same budget admits up
     to 4x larger blocks — the serving-side payoff of the packed store.
+
+    ``max_pending`` bounds how many submitted-but-incomplete requests
+    the service holds (queued + in flight); ``backpressure`` picks what
+    ``submit`` does at the budget: ``'block'`` synchronously works one
+    batch at a time off the queues until there is room (the producer is
+    slowed to the service's pace), ``'raise'`` sheds the request with
+    :class:`ServiceOverloaded` (the caller owns retry policy).  The
+    budget bounds host memory *and* worst-case result latency — an
+    unbounded intake queue hides, rather than signals, an overloaded
+    service.
     """
 
     # batch pops a request may be passed over (by longest-first block
@@ -125,7 +140,17 @@ class AlignmentService:
                  redispatch_after: float = 60.0,
                  min_bucket: int = bucketing.DEFAULT_MIN_BUCKET,
                  coalesce: bool = True, pipeline_depth: int = 2,
-                 tb_budget_bytes: Optional[int] = None, max_block: int = 256):
+                 tb_budget_bytes: Optional[int] = None, max_block: int = 256,
+                 max_pending: Optional[int] = None,
+                 backpressure: str = "block"):
+        if backpressure not in ("block", "raise"):
+            raise ValueError(
+                f"backpressure must be 'block' or 'raise', got {backpressure!r}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = max_pending
+        self.backpressure = backpressure
+        self._pending = 0
         self.max_len, self.block = max_len, block
         self.tb_budget_bytes = tb_budget_bytes
         self.max_block = max_block
@@ -206,8 +231,35 @@ class AlignmentService:
             raise ValueError(
                 f"request {req.rid}: lengths ({len(req.query)}, "
                 f"{len(req.ref)}) exceed max_len {self.max_len}")
+        self._admit(req.rid)
+        self._pending += 1
         self._enqueue(req)
         return AlignFuture(req, self)
+
+    def _admit(self, rid) -> None:
+        """Backpressure gate: make room under ``max_pending`` or shed."""
+        if self.max_pending is None or self._pending < self.max_pending:
+            return
+        if self.backpressure == "raise":
+            raise ServiceOverloaded(
+                f"request {rid}: {self._pending} requests pending >= "
+                f"max_pending {self.max_pending}")
+        # block: work batches off the queues synchronously until there is
+        # room.  Outside wait() nothing is in flight, so queued work is
+        # the entire backlog; stop only when the queues are empty (a
+        # batch may legitimately complete zero requests — stale gens),
+        # so submit can never spin on an idle service.
+        while self._pending >= self.max_pending:
+            if self._step() is None:
+                break
+
+    def _step(self, worker: str = "w0") -> Optional[int]:
+        """Launch + harvest one batch synchronously; #completed, or
+        ``None`` when every queue is empty."""
+        item = self._next_batch()
+        if item is None:
+            return None
+        return self._harvest(item, self._launch(worker, item))
 
     def submit_all(self, reqs: Sequence[AlignRequest]) -> List[AlignFuture]:
         return [self.submit(r) for r in reqs]
@@ -364,6 +416,7 @@ class AlignmentService:
                                                       int(n_moves[i]))
                     r.result = res
                     done += 1
+                    self._pending -= 1
         except BaseException:
             self._requeue_incomplete(ib)
             raise

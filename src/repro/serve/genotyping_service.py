@@ -1,0 +1,298 @@
+"""Genotyping as a service: the pair-HMM forward channel next to align.
+
+Where ``AlignmentService`` serves (query, ref) pairs one result each, a
+genotype request is a *site*: N reads x H candidate haplotypes whose
+N*H forward likelihoods are the evidence for one genotype call.  The
+service flattens every submitted site into pair jobs, queues them per
+length bucket (exactly the align channels' shape discipline — one
+score-only sum-semiring CompiledPlan per bucket, shared service-wide),
+and drives launch/harvest through the same
+``runtime.dispatch.run_pipelined`` dispatcher: host padding of batch
+N+1 overlaps the device computing batch N.  A site's call lands the
+moment its last pair harvests (sites therefore complete out of
+submission order under mixed lengths — the future, not the queue,
+carries the ordering contract).
+
+Backpressure mirrors ``AlignmentService``: ``max_pending`` bounds
+incomplete *sites*, ``backpressure='block'`` makes ``submit`` work
+batches synchronously until there is room, ``'raise'`` sheds with
+``ServiceOverloaded``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.prob import genotype as genotype_mod
+from repro.prob import kernels as prob_kernels
+from repro.runtime import bucketing
+from repro.runtime import dispatch as dispatch_mod
+from repro.runtime import plan as plan_mod
+
+from .alignment_service import ServiceOverloaded
+
+
+@dataclasses.dataclass(eq=False)   # identity semantics: ndarray fields
+class GenotypeRequest:
+    """One site: reads + candidate haplotypes -> a genotype call."""
+    rid: int
+    reads: List[np.ndarray]
+    haplotypes: List[np.ndarray]
+    ploidy: int = 2
+    result: Optional[dict] = None    # genotype.call_genotype dict + "ll"
+
+
+@dataclasses.dataclass(eq=False)
+class _PairJob:
+    """One (read, haplotype) cell of a site's likelihood matrix."""
+    req: GenotypeRequest
+    read_idx: int
+    hap_idx: int
+    query: np.ndarray
+    ref: np.ndarray
+    waits: int = 0                   # batch pops this job was passed over
+
+
+@dataclasses.dataclass(eq=False)
+class _InflightBlock:
+    bucket: Tuple[int, int]
+    jobs: List[_PairJob]
+    out: object                      # device Alignment batch (async)
+
+
+class GenotypeFuture:
+    """Handle returned by ``submit``; ``result()`` pumps the service's
+    dispatcher until this site's call lands (same single-process
+    contract as ``AlignFuture``)."""
+
+    __slots__ = ("req", "_svc")
+
+    def __init__(self, req: GenotypeRequest, svc: "GenotypingService"):
+        self.req = req
+        self._svc = svc
+
+    def done(self) -> bool:
+        return self.req.result is not None
+
+    def result(self) -> dict:
+        if not self.done():
+            self._svc.wait([self])
+        if self.req.result is None:
+            raise RuntimeError(f"site {self.req.rid} did not complete")
+        return self.req.result
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return f"GenotypeFuture(rid={self.req.rid}, {state})"
+
+
+class GenotypingService:
+    """Single-process genotyping channel on the shared runtime.
+
+    ``max_len`` caps read and haplotype lengths (snapped up to the
+    bucket grid like the align channels); ``block`` is the pair-batch
+    row count; ``pipeline_depth`` how many blocks may be in flight.
+    ``hap_norm`` applies the per-haplotype ``-log(len)`` free-start
+    normalization (see ``prob.genotype``).
+    """
+
+    def __init__(self, max_len: int = 512, block: int = 8,
+                 engine_name: str = "wavefront", params=None,
+                 pipeline_depth: int = 2,
+                 min_bucket: int = bucketing.DEFAULT_MIN_BUCKET,
+                 hap_norm: bool = True,
+                 max_pending: Optional[int] = None,
+                 backpressure: str = "block"):
+        if backpressure not in ("block", "raise"):
+            raise ValueError(
+                f"backpressure must be 'block' or 'raise', got {backpressure!r}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_len = max_len
+        self.block = block
+        self.engine_name = engine_name
+        self.pipeline_depth = pipeline_depth
+        self.min_bucket = min(min_bucket, max_len)
+        self.max_bucket = bucketing.bucket_length(
+            max_len, min_bucket=self.min_bucket)
+        self.hap_norm = hap_norm
+        self.max_pending = max_pending
+        self.backpressure = backpressure
+        self.spec = prob_kernels.cached_pairhmm()
+        self.params = prob_kernels.default_params() if params is None \
+            else params
+        self.queues: Dict[Tuple[int, int], List[_PairJob]] = {}
+        self.inflight: List[_InflightBlock] = []
+        self._pending = 0            # incomplete sites
+        self.dispatches = collections.deque(maxlen=4096)
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, req: GenotypeRequest) -> GenotypeFuture:
+        reads = [np.asarray(r, np.uint8) for r in req.reads]
+        haps = [np.asarray(h, np.uint8) for h in req.haplotypes]
+        if not reads or len(haps) < 1:
+            raise ValueError(f"site {req.rid}: needs >= 1 read and haplotype")
+        if req.ploidy < 1:
+            raise ValueError(f"site {req.rid}: ploidy must be >= 1, "
+                             f"got {req.ploidy}")
+        for arr, kind in ((reads, "read"), (haps, "haplotype")):
+            for a in arr:
+                if not 1 <= len(a) <= self.max_len:
+                    raise ValueError(
+                        f"site {req.rid}: {kind} length {len(a)} outside "
+                        f"[1, {self.max_len}]")
+        self._admit(req.rid)
+        req.reads, req.haplotypes = reads, haps
+        req._ll = np.full((len(reads), len(haps)), np.nan)   # type: ignore
+        req._left = len(reads) * len(haps)                   # type: ignore
+        self._pending += 1
+        for ri, read in enumerate(reads):
+            for hi, hap in enumerate(haps):
+                self._enqueue(_PairJob(req=req, read_idx=ri, hap_idx=hi,
+                                       query=read, ref=hap))
+        return GenotypeFuture(req, self)
+
+    def submit_all(self, reqs: Sequence[GenotypeRequest]
+                   ) -> List[GenotypeFuture]:
+        return [self.submit(r) for r in reqs]
+
+    def _enqueue(self, job: _PairJob) -> None:
+        bucket = bucketing.bucket_shape(
+            len(job.query), len(job.ref),
+            min_bucket=self.min_bucket, max_bucket=self.max_bucket)
+        self.queues.setdefault(bucket, []).append(job)
+
+    def _admit(self, rid) -> None:
+        if self.max_pending is None or self._pending < self.max_pending:
+            return
+        if self.backpressure == "raise":
+            raise ServiceOverloaded(
+                f"site {rid}: {self._pending} sites pending >= "
+                f"max_pending {self.max_pending}")
+        while self._pending >= self.max_pending:
+            if self._step() is None:
+                break
+
+    # -- batch formation / launch / harvest --------------------------------
+    # batch pops a job may be passed over (by longest-first block
+    # formation) before it jumps to the front of its queue — the same
+    # anti-starvation guard as AlignmentService.STALE_AFTER
+    STALE_AFTER = 4
+
+    def _next_batch(self):
+        """Pop up to ``block`` jobs of one bucket, longest-first within
+        a bounded arrival window so the engine's shared early-exit bound
+        stays tight; a job out-sorted ``STALE_AFTER`` times jumps to the
+        front regardless of length, so no site can be starved by a
+        stream of longer pairs."""
+        pending = sorted((b for b, q in self.queues.items() if q),
+                         key=lambda b: b[0] * b[1])
+        if not pending:
+            return None
+        bucket = pending[0]
+        queue = self.queues[bucket]
+        w = min(len(queue), 4 * self.block)
+        queue[:w] = sorted(
+            queue[:w], key=lambda j: (j.waits < self.STALE_AFTER,
+                                      -(len(j.query) + len(j.ref))))
+        jobs = [queue.pop(0) for _ in range(min(self.block, len(queue)))]
+        for j in queue[: w - len(jobs)]:
+            j.waits += 1
+        return bucket, jobs
+
+    def _launch(self, item) -> _InflightBlock:
+        """Pad one block and enqueue it (non-blocking under JAX async
+        dispatch); a raising plan requeues the popped jobs."""
+        bucket, jobs = item
+        try:
+            Lq, Lr = bucket
+            n = self.block
+            qs = np.zeros((n, Lq), np.uint8)
+            rs = np.zeros((n, Lr), np.uint8)
+            ql = np.ones((n,), np.int32)
+            rl = np.ones((n,), np.int32)
+            for i, job in enumerate(jobs):
+                ql[i], rl[i] = len(job.query), len(job.ref)
+                qs[i, : ql[i]] = job.query
+                rs[i, : rl[i]] = job.ref
+            plan = plan_mod.get_plan(self.spec, self.engine_name,
+                                     (Lq,), (Lr,), batch_size=n,
+                                     with_traceback=False, donate=True)
+            out = plan(self.params, jnp.asarray(qs), jnp.asarray(rs),
+                       jnp.asarray(ql), jnp.asarray(rl))
+        except BaseException:
+            for job in jobs:
+                self._enqueue(job)
+            raise
+        ib = _InflightBlock(bucket=bucket, jobs=jobs, out=out)
+        self.inflight.append(ib)
+        self.dispatches.append({"bucket": bucket, "n": len(jobs)})
+        return ib
+
+    def _harvest(self, item, ib: _InflightBlock) -> int:
+        """Block on one launched block; land scores, finalize any site
+        whose matrix just filled.  Returns #sites completed."""
+        done = 0
+        try:
+            scores = np.asarray(ib.out.score)        # sync point
+            for i, job in enumerate(ib.jobs):
+                req = job.req
+                ll = float(scores[i])
+                if self.hap_norm:
+                    ll -= float(np.log(len(job.ref)))
+                req._ll[job.read_idx, job.hap_idx] = ll
+                req._left -= 1
+                if req._left == 0:
+                    req.result = genotype_mod.call_genotype(
+                        req._ll, req.ploidy)
+                    req.result["ll"] = req._ll
+                    self._pending -= 1
+                    done += 1
+        except BaseException:
+            for job in ib.jobs:                      # requeue: no loss
+                if np.isnan(job.req._ll[job.read_idx, job.hap_idx]):
+                    self._enqueue(job)
+            raise
+        finally:
+            if ib in self.inflight:
+                self.inflight.remove(ib)
+        return done
+
+    # -- the dispatcher loop -----------------------------------------------
+    def _step(self) -> Optional[int]:
+        """One synchronous launch+harvest; ``None`` on empty queues."""
+        item = self._next_batch()
+        if item is None:
+            return None
+        return self._harvest(item, self._launch(item))
+
+    def wait(self, futures: Optional[Sequence[GenotypeFuture]] = None) -> int:
+        """Run the pipelined dispatcher until ``futures`` resolve (or the
+        queues drain).  Returns #sites completed."""
+        def batches() -> Iterator:
+            while True:
+                if futures is not None and all(f.done() for f in futures):
+                    return
+                item = self._next_batch()
+                if item is None:
+                    return
+                yield item
+
+        def abandon(item, ib):
+            for job in ib.jobs:
+                if np.isnan(job.req._ll[job.read_idx, job.hap_idx]):
+                    self._enqueue(job)
+            if ib in self.inflight:
+                self.inflight.remove(ib)
+
+        return dispatch_mod.run_pipelined(
+            batches(), self._launch, self._harvest,
+            depth=self.pipeline_depth, on_abandon=abandon)
+
+    def drain(self) -> int:
+        """Process everything queued; returns #sites completed."""
+        return self.wait()

@@ -1,0 +1,387 @@
+"""Probabilistic (sum-semiring) subsystem: forward oracle, engine parity,
+posterior identities, genotyping end-to-end, service backpressure, and
+the affine-gap extension satellite.
+
+The ground truth for the forward likelihood is *exhaustive path
+enumeration*: every legal state path's log-probability, log-sum-exp'd in
+float64 — an oracle that shares no code with any engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import align, alphabets
+from repro.core import semiring as semiring_mod
+from repro.data.synthetic import sample_site
+from repro.prob import (call_site, cached_pairhmm, cached_pairhmm_backward,
+                        default_params, forward_backward, genotypes,
+                        oracle_forward, read_hap_log_likelihoods)
+from repro.runtime import dispatch, plan as plan_mod
+from repro.serve import (AlignRequest, AlignmentService, GenotypeRequest,
+                         GenotypingService, ServiceOverloaded)
+
+PARAMS = default_params()
+
+
+def _pair(rng, nq, nr):
+    return (rng.integers(0, 4, nq).astype(np.uint8),
+            rng.integers(0, 4, nr).astype(np.uint8))
+
+
+@pytest.mark.parametrize("nq,nr", [(1, 1), (2, 3), (3, 2), (4, 4), (3, 6)])
+def test_forward_matches_enumeration_oracle(nq, nr, rng):
+    spec = cached_pairhmm()
+    for trial in range(3):
+        q, r = _pair(rng, nq, nr)
+        want = oracle_forward(PARAMS, q, r)
+        for engine in ("reference", "wavefront"):
+            got = float(align(spec, PARAMS, q, r, engine_name=engine,
+                              with_traceback=False).score)
+            assert got == pytest.approx(want, rel=1e-4), (engine, nq, nr)
+
+
+def test_forward_oracle_other_params(rng):
+    """Parameter sweep: the oracle parity is not an artifact of the
+    default delta/eps/match_p point."""
+    from repro.prob.kernels import default_params as mk
+    spec = cached_pairhmm()
+    for delta, eps, mp in [(0.05, 0.3, 0.8), (0.4, 0.05, 0.99)]:
+        params = mk(delta=delta, eps=eps, match_p=mp)
+        q, r = _pair(rng, 3, 4)
+        want = oracle_forward(params, q, r)
+        got = float(align(spec, params, q, r, engine_name="wavefront",
+                          with_traceback=False).score)
+        assert got == pytest.approx(want, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity at real sizes (the logsumexp analogue of the all-15 gate)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["wavefront", "banded", "pallas_interpret"])
+@pytest.mark.parametrize("nq,nr", [(32, 32), (48, 31), (17, 63)])
+def test_logsumexp_engine_parity(engine, nq, nr, rng):
+    spec = cached_pairhmm(band=128) if engine == "banded" else cached_pairhmm()
+    q, r = _pair(rng, nq, nr)
+    a = align(spec, PARAMS, q, r, engine_name="reference",
+              with_traceback=False)
+    b = align(spec, PARAMS, q, r, engine_name=engine, with_traceback=False)
+    np.testing.assert_allclose(np.asarray(a.score), np.asarray(b.score),
+                               rtol=2e-5)
+
+
+def test_backward_engine_parity(rng):
+    spec = cached_pairhmm_backward()
+    q, r = _pair(rng, 40, 44)
+    a = align(spec, PARAMS, q[::-1].copy(), r[::-1].copy(),
+              engine_name="reference", with_traceback=False)
+    b = align(spec, PARAMS, q[::-1].copy(), r[::-1].copy(),
+              engine_name="wavefront", with_traceback=False)
+    np.testing.assert_allclose(np.asarray(a.score), np.asarray(b.score),
+                               rtol=2e-5)
+
+
+def test_viterbi_mode_bounds_forward(rng):
+    """Max-plus over the identical model: best path <= total mass, and
+    close for near-identical pairs (one path dominates)."""
+    q, r = _pair(rng, 24, 24)
+    fwd = float(align(cached_pairhmm(), PARAMS, q, r,
+                      engine_name="wavefront", with_traceback=False).score)
+    vit = float(align(cached_pairhmm("max"), PARAMS, q, r,
+                      engine_name="wavefront", with_traceback=False).score)
+    assert vit <= fwd + 1e-4
+    ident = np.arange(16, dtype=np.uint8) % 4
+    fwd_i = float(align(cached_pairhmm(), PARAMS, ident, ident,
+                        engine_name="wavefront", with_traceback=False).score)
+    vit_i = float(align(cached_pairhmm("max"), PARAMS, ident, ident,
+                        engine_name="wavefront", with_traceback=False).score)
+    assert vit_i <= fwd_i and fwd_i - vit_i < 1.0
+
+
+def test_banded_forward_converges_to_full(rng):
+    """A band covering every diagonal reproduces the unbanded mass; a
+    tight band lower-bounds it (paths are only ever removed)."""
+    q, r = _pair(rng, 32, 32)
+    full = float(align(cached_pairhmm(), PARAMS, q, r,
+                       engine_name="wavefront", with_traceback=False).score)
+    wide = float(align(cached_pairhmm(band=64), PARAMS, q, r,
+                       engine_name="wavefront", with_traceback=False).score)
+    tight = float(align(cached_pairhmm(band=4), PARAMS, q, r,
+                        engine_name="wavefront", with_traceback=False).score)
+    assert wide == pytest.approx(full, rel=1e-6)
+    assert tight <= full + 1e-4
+
+
+def test_padded_lengths_no_drift(rng):
+    """Bucket padding with effective lengths is mass-neutral: no NaN, no
+    -inf, no drift vs the exact-size fill."""
+    import jax.numpy as jnp
+    from repro.runtime import registry
+    spec = cached_pairhmm()
+    eng = registry.get_engine("wavefront")
+    q, r = _pair(rng, 21, 27)
+    exact = float(eng(spec, PARAMS, jnp.asarray(q), jnp.asarray(r)).score)
+    qp = np.zeros(64, np.uint8); qp[:21] = q
+    rp = np.zeros(64, np.uint8); rp[:27] = r
+    padded = float(eng(spec, PARAMS, jnp.asarray(qp), jnp.asarray(rp),
+                       21, 27).score)
+    assert np.isfinite(padded)
+    assert padded == pytest.approx(exact, rel=1e-5)
+
+
+def test_run_pairs_batched_matches_single(rng):
+    """Mixed-length pair stream through the bucketed batch dispatch ==
+    per-pair top-level calls, and the sum-semiring plans it compiled are
+    visible in plan_cache_info."""
+    spec = cached_pairhmm()
+    pairs = [_pair(rng, int(rng.integers(8, 60)), int(rng.integers(8, 60)))
+             for _ in range(9)]
+    outs = dispatch.run_pairs(spec, PARAMS, pairs, block=4,
+                              with_traceback=False)
+    for (q, r), out in zip(pairs, outs):
+        single = align(spec, PARAMS, q, r, engine_name="wavefront",
+                       with_traceback=False)
+        assert float(out.score) == pytest.approx(float(single.score),
+                                                 rel=2e-5)
+    keys = plan_mod.plan_cache_info()["keys"]
+    assert any(k.semiring == "logsumexp" and k.batch_size == 4
+               for k in keys)
+
+
+def test_sum_semiring_rejects_traceback_and_int_dtype():
+    import jax.numpy as jnp
+    from repro.core import types as T
+    from repro.core.kernels_zoo import common as C
+    with pytest.raises(ValueError, match="floating"):
+        T.DPKernelSpec(
+            name="bad", n_layers=1, pe=lambda *a: None,
+            init_row=None, init_col=None, objective="logsumexp",
+            score_dtype=jnp.int32)
+    with pytest.raises(ValueError, match="trace"):
+        T.DPKernelSpec(
+            name="bad", n_layers=1, pe=lambda *a: None,
+            init_row=None, init_col=None, objective="logsumexp",
+            score_dtype=jnp.float32,
+            traceback=C.linear_tb(T.STOP_ORIGIN))
+    with pytest.raises(ValueError, match="objective"):
+        semiring_mod.from_objective("product")
+
+
+# ---------------------------------------------------------------------------
+# Posterior decoding
+# ---------------------------------------------------------------------------
+def test_posterior_identities(rng):
+    for _ in range(3):
+        q, r = _pair(rng, int(rng.integers(4, 16)), int(rng.integers(4, 20)))
+        post = forward_backward(PARAMS, q, r)
+        # forward and backward fold the same mass
+        assert post.log_z_backward == pytest.approx(post.log_z, rel=1e-4)
+        # each read base is matched to exactly one hap base or inserted
+        rows = post.post_match.sum(axis=1) + post.post_ins.sum(axis=1)
+        np.testing.assert_allclose(rows, 1.0, atol=5e-4)
+
+
+def test_posterior_diagonal_for_identical_pair():
+    q = (np.arange(12, dtype=np.uint8) % 4)
+    post = forward_backward(PARAMS, q, q)
+    assert (np.diag(post.post_match) > 0.5).all()
+    assert (post.map_path == np.arange(12)).all()
+
+
+# ---------------------------------------------------------------------------
+# Genotyping
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("truth", [(0, 0), (0, 1), (1, 1)])
+def test_call_site_recovers_genotype(truth):
+    site = sample_site(seed=11 * sum(truth) + 3, n_reads=10,
+                       genotype=truth, error_rate=0.01)
+    out = call_site(site.reads, site.haplotypes)
+    assert out["GT"] == truth
+    assert out["GQ"] > 0
+    assert out["PL"][out["genotypes"].index(truth)] == 0
+    assert out["ll"].shape == (10, 2)
+
+
+def test_genotype_enumeration():
+    assert genotypes(2, 2) == [(0, 0), (0, 1), (1, 1)]
+    assert len(genotypes(3, 2)) == 6
+
+
+def test_hap_norm_makes_lengths_comparable(rng):
+    """Unnormalized forward mass grows with haplotype length (more free
+    start sites); the -log(len) normalization removes the bias."""
+    read = alphabets.random_dna(rng, 24)
+    hap = np.concatenate([alphabets.random_dna(rng, 20), read,
+                          alphabets.random_dna(rng, 20)])
+    long_hap = np.concatenate([hap, alphabets.random_dna(rng, 64)])
+    ll = read_hap_log_likelihoods([read], [hap, long_hap], PARAMS)
+    # the true placement exists in both; normalized scores are close
+    assert abs(ll[0, 0] - ll[0, 1]) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# GenotypingService
+# ---------------------------------------------------------------------------
+def test_genotyping_service_end_to_end():
+    svc = GenotypingService(max_len=64, block=8, pipeline_depth=2)
+    truths = [(0, 0), (0, 1), (1, 1), (0, 1)]
+    futs = []
+    for k, gt in enumerate(truths):
+        site = sample_site(seed=50 + k, n_reads=8, genotype=gt,
+                           error_rate=0.01)
+        futs.append(svc.submit(GenotypeRequest(
+            rid=k, reads=site.reads, haplotypes=site.haplotypes)))
+    done = svc.drain()
+    assert done == len(truths)
+    for k, (gt, f) in enumerate(zip(truths, futs)):
+        res = f.result()
+        assert res["GT"] == gt, (k, res["GT"], gt)
+        # service result == the direct pipeline on the same site
+        site = sample_site(seed=50 + k, n_reads=8, genotype=gt,
+                           error_rate=0.01)
+        direct = call_site(site.reads, site.haplotypes)
+        np.testing.assert_allclose(res["ll"], direct["ll"], rtol=1e-6)
+
+
+def test_genotyping_service_future_pumps_dispatcher():
+    svc = GenotypingService(max_len=64, block=4)
+    site = sample_site(seed=7, genotype=(0, 1), error_rate=0.01)
+    fut = svc.submit(GenotypeRequest(rid=0, reads=site.reads,
+                                     haplotypes=site.haplotypes))
+    assert not fut.done()
+    assert fut.result()["GT"] == (0, 1)     # result() drives wait()
+
+
+def test_genotyping_service_validates():
+    svc = GenotypingService(max_len=32)
+    with pytest.raises(ValueError, match="length"):
+        svc.submit(GenotypeRequest(rid=0, reads=[np.zeros(64, np.uint8)],
+                                   haplotypes=[np.zeros(16, np.uint8)]))
+    with pytest.raises(ValueError, match="read"):
+        svc.submit(GenotypeRequest(rid=1, reads=[],
+                                   haplotypes=[np.zeros(16, np.uint8)]))
+    with pytest.raises(ValueError, match="ploidy"):
+        svc.submit(GenotypeRequest(rid=2, reads=[np.ones(8, np.uint8)],
+                                   haplotypes=[np.ones(8, np.uint8)],
+                                   ploidy=0))
+    assert svc._pending == 0         # rejected sites never consume budget
+
+
+def test_sample_site_rejects_wrapping_alts():
+    with pytest.raises(ValueError, match="n_alts"):
+        sample_site(n_alts=4)        # a 4th SNP would wrap onto the ref
+
+
+# ---------------------------------------------------------------------------
+# Backpressure (PR 3 follow-on: both services)
+# ---------------------------------------------------------------------------
+def _site_req(rid):
+    site = sample_site(seed=rid, genotype=(0, 1))
+    return GenotypeRequest(rid=rid, reads=site.reads,
+                           haplotypes=site.haplotypes)
+
+
+def test_genotyping_backpressure_raise():
+    svc = GenotypingService(max_len=64, max_pending=2, backpressure="raise")
+    svc.submit(_site_req(0))
+    svc.submit(_site_req(1))
+    with pytest.raises(ServiceOverloaded):
+        svc.submit(_site_req(2))
+    svc.drain()                      # budget frees after completion
+    svc.submit(_site_req(3))
+
+
+def test_genotyping_backpressure_block():
+    svc = GenotypingService(max_len=64, block=4, max_pending=2,
+                            backpressure="block")
+    futs = [svc.submit(_site_req(i)) for i in range(5)]
+    assert svc._pending <= 2         # submit worked batches to make room
+    svc.drain()
+    assert all(f.done() for f in futs)
+
+
+def _align_req(rid, rng, n=40):
+    return AlignRequest(rid=rid, kernel="global_linear",
+                        query=alphabets.random_dna(rng, n),
+                        ref=alphabets.random_dna(rng, n))
+
+
+def test_alignment_backpressure_raise(rng):
+    svc = AlignmentService(max_len=64, block=4, max_pending=3,
+                           backpressure="raise")
+    for i in range(3):
+        svc.submit(_align_req(i, rng))
+    with pytest.raises(ServiceOverloaded):
+        svc.submit(_align_req(9, rng))
+    svc.drain()
+    svc.submit(_align_req(10, rng))  # budget freed
+
+
+def test_alignment_backpressure_block(rng):
+    svc = AlignmentService(max_len=64, block=4, max_pending=3,
+                           backpressure="block")
+    peak = 0
+    futs = []
+    for i in range(12):
+        seq = alphabets.random_dna(rng, 20 + i)
+        futs.append(svc.submit(AlignRequest(rid=i, kernel="global_linear",
+                                            query=seq, ref=seq)))
+        peak = max(peak, svc._pending)
+    assert peak <= 3
+    svc.drain()
+    assert all(f.done() for f in futs)
+    # results are still correct under the budget-constrained order
+    for i, f in enumerate(futs):
+        assert f.result()["score"] == 2 * (20 + i)   # perfect self-match
+
+
+def test_backpressure_config_validation():
+    with pytest.raises(ValueError, match="backpressure"):
+        AlignmentService(backpressure="drop")
+    with pytest.raises(ValueError, match="max_pending"):
+        GenotypingService(max_pending=0)
+
+
+# ---------------------------------------------------------------------------
+# Affine-gap extension (PR 2 follow-on)
+# ---------------------------------------------------------------------------
+def test_semiglobal_affine_degenerates_to_linear(rng):
+    from repro.core.kernels_zoo import dna_affine, dna_linear
+    spec_a = dna_affine.semiglobal_affine()
+    params_a = dna_affine.default_params(gap_open=-2, gap_extend=-2)
+    spec_l = dna_linear.semiglobal()
+    params_l = dna_linear.default_params(gap=-2)
+    q, r = _pair(rng, 30, 64)
+    sa = align(spec_a, params_a, q, r, with_traceback=False).score
+    sl = align(spec_l, params_l, q, r, with_traceback=False).score
+    assert int(sa) == int(sl)
+
+
+def test_affine_extension_keeps_long_indel_contiguous(rng):
+    from repro.core.kernels_zoo import dna_affine
+    from repro.core.traceback import moves_to_cigar
+    ref = alphabets.random_dna(rng, 200)
+    read = np.concatenate([ref[40:70], ref[76:106]])   # 6-base deletion
+    a = align(dna_affine.semiglobal_affine(), dna_affine.default_params(),
+              read, ref)
+    cig = moves_to_cigar(a.moves, a.n_moves)
+    assert "6I" in cig or "6D" in cig, cig
+
+
+@pytest.mark.parametrize("gap_mode", ["linear", "affine"])
+def test_mapper_gap_modes(gap_mode, rng):
+    from repro.data.synthetic import sample_reads
+    from repro.mapping import ReadMapper
+    ref = alphabets.random_dna(rng, 12000)
+    reads = sample_reads(ref, n=16, length=150, error_rate=0.06, seed=5)
+    mapper = ReadMapper(ref, gap_mode=gap_mode)
+    recs = mapper.map_reads(reads.reads, reads.lens)
+    hits = sum(1 for i, rec in enumerate(recs)
+               if rec.is_mapped and abs((rec.pos - 1) - int(reads.pos[i])) <= 5)
+    assert hits / len(recs) >= 0.9
+
+
+def test_mapper_rejects_unknown_gap_mode(rng):
+    from repro.mapping import ReadMapper
+    with pytest.raises(ValueError, match="gap_mode"):
+        ReadMapper(alphabets.random_dna(rng, 2000), gap_mode="convex")

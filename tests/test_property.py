@@ -138,3 +138,41 @@ def test_int8_quantization_roundtrip(data):
     qv, sv = _quantize_log(v)
     rel = np.abs(np.asarray(_dequantize_log(qv, sv)) / np.asarray(v) - 1.0)
     assert rel.max() < 0.25          # log-grid relative error bound
+
+
+@SETTINGS
+@given(q=dna_seq, r=dna_seq, bucket=st.sampled_from([64, 128]))
+def test_pairhmm_padding_never_drifts(q, r, bucket):
+    """Sum-semiring fills are padding-neutral: a pair zero-padded into
+    any larger bucket (with effective lengths) produces the same finite
+    log-likelihood as the exact-size fill — no NaN, no -inf leakage from
+    the sentinel-masked dead cells."""
+    from repro.prob import cached_pairhmm, default_params
+    from repro.runtime import registry
+    spec = cached_pairhmm()
+    params = default_params()
+    eng = registry.get_engine("wavefront")
+    exact = float(eng(spec, params, q, r).score)
+    ql, rl = len(q), len(r)
+    qp = jnp.zeros((bucket,), jnp.uint8).at[:ql].set(q)
+    rp = jnp.zeros((bucket,), jnp.uint8).at[:rl].set(r)
+    padded = float(eng(spec, params, qp, rp, ql, rl).score)
+    assert np.isfinite(exact) and np.isfinite(padded)
+    assert abs(padded - exact) <= 1e-5 * max(1.0, abs(exact))
+
+
+@SETTINGS
+@given(q=dna_seq, r=dna_seq)
+def test_pairhmm_bucketed_api_matches_direct(q, r):
+    """The top-level bucketed dispatch (api.align pads to a power-of-two
+    bucket and serves the shared plan) never drifts from the unpadded
+    engine call, and stays finite for every input."""
+    from repro.prob import cached_pairhmm, default_params
+    from repro.runtime import registry
+    spec = cached_pairhmm()
+    params = default_params()
+    via_plan = float(align(spec, params, q, r, with_traceback=False).score)
+    direct = float(registry.get_engine("wavefront")(
+        spec, params, q, r).score)
+    assert np.isfinite(via_plan)
+    assert abs(via_plan - direct) <= 1e-5 * max(1.0, abs(direct))
