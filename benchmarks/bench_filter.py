@@ -1,0 +1,241 @@
+"""Filter-ladder benchmarks: bit-parallel myers GCUPS vs the wavefront
+engine on the unit-cost kernels, plus ladder-on vs ladder-off mapping
+throughput.
+
+Three sections:
+
+* **parity gate** (always, the ``--quick`` / tier-1 payload): the myers
+  engine must be bit-exact — score *and* end cell — against the exact-DP
+  engines on both unit-cost kernels across random length-mixed pairs
+  (reference oracle at small buckets, wavefront at large ones, where the
+  row-major oracle's compile time dominates);
+* **GCUPS sweep** (full mode): batched ``edit_distance`` fill plans,
+  myers vs wavefront, per bucket — lengths drawn from the
+  ``(bucket/2, bucket]`` range bucketing guarantees, cells counted at
+  the *actual* ``q_len * r_len``.  Asserts the >= 10x claim at buckets
+  >= 256 after asserting bit-identity on the very blocks being timed;
+* **ladder** (full mode): the mapper on a half-junk read stream
+  (chimeric reads: a planted exact k-mer inside random sequence — they
+  chain, then die in extension) with ``filter_mode='myers'`` vs
+  ``'off'``.  The screen kills junk at bit-parallel cost before full DP
+  runs; genuine-read accuracy must not move.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alphabets, kernels_zoo, reference
+from repro.runtime import plan as plan_mod
+from repro.runtime import registry
+
+from .common import emit
+
+GCUPS_FACTOR = 10.0            # acceptance floor at buckets >= 256
+GCUPS_MIN_BUCKET = 256
+
+
+def _mixed_batch(rng, n, bucket):
+    qs = rng.integers(0, 4, (n, bucket)).astype(np.uint8)
+    rs = rng.integers(0, 4, (n, bucket)).astype(np.uint8)
+    ql = rng.integers(bucket // 2 + 1, bucket + 1, n).astype(np.int32)
+    rl = rng.integers(bucket // 2 + 1, bucket + 1, n).astype(np.int32)
+    return (jnp.asarray(qs), jnp.asarray(rs), jnp.asarray(ql),
+            jnp.asarray(rl))
+
+
+def _assert_same(a, b, ctx):
+    for f in ("score", "end_i", "end_j"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{ctx}: {f}")
+
+
+def parity_gate(rng, buckets, n: int = 8) -> int:
+    """Assert myers == exact DP on both unit-cost kernels; #pairs checked.
+
+    Unlimited mode must be bit-exact on score *and* end cell.  In
+    thresholded mode the exact engines don't saturate, so the contract
+    checked is ``where(exact > k, sentinel, exact)`` — with the end cell
+    compared only where the distance survives the threshold.
+    """
+    checked = 0
+    for kname in ("edit_distance", "edit_search"):
+        for max_dist in (-1, 20):
+            spec, _ = kernels_zoo.make(kname)
+            params = {"max_dist": jnp.int32(max_dist)}
+            sent = int(spec.sentinel())
+            for bucket in buckets:
+                batch = _mixed_batch(rng, n, bucket)
+                ctx = f"{kname}/k{max_dist}/b{bucket}"
+                my = plan_mod.get_plan(spec, "myers", (bucket,), (bucket,),
+                                       batch_size=n, with_traceback=False,
+                                       mode="fill")(params, *batch)
+                if bucket <= 128:
+                    qs, rs, ql, rl = batch
+                    ex1 = [reference.run(spec, params, qs[i], rs[i],
+                                         ql[i], rl[i]) for i in range(n)]
+                    ex = {f: np.asarray([getattr(e, f) for e in ex1])
+                          for f in ("score", "end_i", "end_j")}
+                else:
+                    ex0 = plan_mod.get_plan(
+                        spec, "wavefront", (bucket,), (bucket,),
+                        batch_size=n, with_traceback=False,
+                        mode="fill")(params, *batch)
+                    ex = {f: np.asarray(getattr(ex0, f))
+                          for f in ("score", "end_i", "end_j")}
+                want = ex["score"]
+                if max_dist >= 0:        # the k-saturation contract
+                    want = np.where(want > max_dist, sent, want)
+                np.testing.assert_array_equal(np.asarray(my.score), want,
+                                              err_msg=f"{ctx}: score")
+                live = want < sent
+                for f in ("end_i", "end_j"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(my, f))[live], ex[f][live],
+                        err_msg=f"{ctx}: {f}")
+                checked += n
+    return checked
+
+
+def _stream_time(plan, params, blocks, iters: int) -> float:
+    import jax
+
+    def once():
+        outs = [plan(params, *b) for b in blocks]
+        jax.block_until_ready(outs)
+
+    once()                                 # warm / compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        once()
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def gcups_sweep(rng, buckets, n: int = 128, n_blocks: int = 4,
+                iters: int = 5) -> list:
+    # batch 128: the bit-parallel engine is dispatch-bound on CPU (its
+    # per-op tensors are tiny), so GCUPS scales with batch width; the
+    # wavefront engine is compute-bound and flat in batch.  Screens run
+    # over bulk candidate batches, so the wide-batch number is the one
+    # the ladder actually sees.
+    spec, _ = kernels_zoo.make("edit_distance")
+    params = {"max_dist": jnp.int32(-1)}
+    cells_out = []
+    for bucket in buckets:
+        blocks = [_mixed_batch(rng, n, bucket) for _ in range(n_blocks)]
+        cells = sum(int((np.asarray(ql).astype(np.int64) *
+                         np.asarray(rl)).sum()) for _, _, ql, rl in blocks)
+        my = plan_mod.get_plan(spec, "myers", (bucket,), (bucket,),
+                               batch_size=n, with_traceback=False,
+                               mode="fill")
+        wf = plan_mod.get_plan(spec, "wavefront", (bucket,), (bucket,),
+                               batch_size=n, with_traceback=False,
+                               mode="fill")
+        for blk in blocks:       # bit-identity on the timed blocks
+            _assert_same(my(params, *blk), wf(params, *blk),
+                         f"gcups/b{bucket}")
+        t_my = _stream_time(my, params, blocks, iters)
+        t_wf = _stream_time(wf, params, blocks, iters)
+        cell = {"bucket": bucket, "batch": n,
+                "gcups_myers": cells / t_my / 1e9,
+                "gcups_wavefront": cells / t_wf / 1e9,
+                "speedup": t_wf / t_my}
+        cells_out.append(cell)
+        emit(f"filter/gcups/b{bucket}/n{n}", t_my / (n * n_blocks),
+             f"myers={cell['gcups_myers']:.3f} "
+             f"wavefront={cell['gcups_wavefront']:.3f} "
+             f"speedup={cell['speedup']:.1f}x")
+        if bucket >= GCUPS_MIN_BUCKET:
+            assert cell["speedup"] >= GCUPS_FACTOR, cell
+    return cells_out
+
+
+def junk_reads(rng, ref, n, read_len, plant_len: int = 20):
+    """Chimeric junk: random sequence with one planted exact reference
+    k-mer — it seeds and chains, then has no real placement."""
+    out = []
+    for _ in range(n):
+        r = rng.integers(0, 4, read_len).astype(np.uint8)
+        p = int(rng.integers(0, len(ref) - plant_len))
+        o = int(rng.integers(0, read_len - plant_len))
+        r[o:o + plant_len] = ref[p:p + plant_len]
+        out.append(r)
+    return out
+
+
+def ladder_bench(rng, *, ref_len=16384, n_genuine=40, n_junk=40,
+                 read_len=150) -> dict:
+    from repro.data.synthetic import sample_reads
+    from repro.mapping import ReadMapper
+
+    ref = alphabets.random_dna(rng, ref_len)
+    reads = sample_reads(ref, n_genuine, read_len, error_rate=0.05, seed=1)
+    read_list = [np.asarray(reads.reads[i, : reads.lens[i]])
+                 for i in range(n_genuine)]
+    read_list += junk_reads(rng, ref, n_junk, read_len)
+    n_total = len(read_list)
+
+    out = {"n_genuine": n_genuine, "n_junk": n_junk, "ref_len": ref_len}
+    for mode in ("myers", "off"):
+        mapper = ReadMapper(ref, filter_mode=mode)
+        mapper.map_reads(read_list)               # warm / compile
+        t0 = time.perf_counter()
+        recs = mapper.map_reads(read_list)
+        dt = time.perf_counter() - t0
+        acc = sum(1 for i in range(n_genuine)
+                  if recs[i].is_mapped and
+                  abs((recs[i].pos - 1) - int(reads.pos[i])) <= 5
+                  ) / n_genuine
+        junk_rejected = sum(1 for r in recs[n_genuine:]
+                            if not r.is_mapped) / max(n_junk, 1)
+        out[mode] = {"reads_per_s": n_total / dt, "accuracy": acc,
+                     "junk_rejected": junk_rejected}
+        emit(f"filter/ladder/{mode}", dt / n_total,
+             f"reads_per_s={n_total / dt:.1f} acc={acc:.2f} "
+             f"junk_rejected={junk_rejected:.2f}")
+    out["ladder_speedup"] = (out["myers"]["reads_per_s"] /
+                             out["off"]["reads_per_s"])
+    assert out["myers"]["accuracy"] >= out["off"]["accuracy"], out
+    return out
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    buckets = [64, 128] if quick else [64, 128, 256, 512]
+    checked = parity_gate(rng, buckets)
+    emit("filter/parity", 0.0, f"pairs={checked} buckets={buckets} ok")
+    metrics: dict = {"parity_pairs": checked, "buckets": buckets}
+    if quick:
+        return metrics                # timing skipped: parity gate only
+    metrics["cells"] = gcups_sweep(rng, buckets)
+    metrics["ladder"] = ladder_bench(rng)
+    info = plan_mod.plan_cache_info()
+    metrics["plan_cache"] = {"size": info["size"], "hits": info["hits"],
+                             "misses": info["misses"]}
+    return metrics
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write headline metrics to OUT (JSON)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    metrics = run(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench_filter": metrics}, f, indent=2,
+                      sort_keys=True)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

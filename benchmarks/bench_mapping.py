@@ -8,8 +8,18 @@ kernel (score-only, shared plan cache) over read x full-reference — the
 cost a kernel-zoo-only repo would pay — measured on a few reads and
 extrapolated (its per-read cost is length-deterministic).
 
-Default workload: 100 reads x 64 kb reference; ``--quick`` shrinks to
-20 reads x 8 kb for CI.
+The workload is deliberately dirty: one junk (chimeric) read per
+genuine read — random sequence with a planted exact k-mer, so it seeds
+and chains but has no real placement.  That is the read class the
+filter ladder exists for: with ``filter_mode='myers'`` the bit-parallel
+screen kills those candidates before full DP runs, and the headline
+compares ladder-on vs ladder-off reads/sec at (asserted) unchanged
+genuine-read accuracy.  Plan-cache observability rides along: the
+headline carries per-cache hit/miss totals plus the myers screen plans
+and the survivor extension plans with their hit/call/compile counters.
+
+Default workload: 100 genuine + 100 junk reads x 64 kb reference;
+``--quick`` shrinks to 20 + 20 x 8 kb for CI.
 """
 from __future__ import annotations
 
@@ -20,54 +30,93 @@ import numpy as np
 from repro.core import alphabets, kernels_zoo, score_only
 from repro.data.synthetic import sample_reads
 from repro.mapping import ReadMapper
+from repro.runtime import plan as plan_mod
 
+from .bench_filter import junk_reads
 from .common import emit
 
 
-def _accuracy(recs, reads, tol: int = 5) -> float:
-    hits = sum(1 for i, r in enumerate(recs)
-               if r.is_mapped and abs((r.pos - 1) - int(reads.pos[i])) <= tol)
-    return hits / len(recs)
+def _accuracy(recs, reads, n_genuine: int, tol: int = 5) -> float:
+    hits = sum(1 for i in range(n_genuine)
+               if recs[i].is_mapped and
+               abs((recs[i].pos - 1) - int(reads.pos[i])) <= tol)
+    return hits / n_genuine
+
+
+def _cache_snapshot() -> dict:
+    """JSON-able plan-cache view: totals + the ladder's plans (the myers
+    screen plans and the extension plans the survivors landed on)."""
+    info = plan_mod.plan_cache_info()
+    ladder = [{"key": str(p["key"]), "hits": p["hits"], "calls": p["calls"],
+               "compile_s": p["compile_s"]}
+              for p in info["plans"]
+              if p["key"].engine == "myers" or p["key"].kernel == "semiglobal"]
+    return {"size": info["size"], "hits": info["hits"],
+            "misses": info["misses"], "ladder_plans": ladder}
 
 
 def run(quick: bool = False):
     rng = np.random.default_rng(0)
     ref_len = 8192 if quick else 65536
-    n_reads = 20 if quick else 100
+    n_genuine = 20 if quick else 100
+    n_junk = n_genuine
     read_len = 150
     ref = alphabets.random_dna(rng, ref_len)
-    reads = sample_reads(ref, n_reads, read_len, error_rate=0.05, seed=1)
+    reads = sample_reads(ref, n_genuine, read_len, error_rate=0.05, seed=1)
+    read_list = [np.asarray(reads.reads[i, : reads.lens[i]])
+                 for i in range(n_genuine)]
+    read_list += junk_reads(rng, ref, n_junk, read_len)
+    n_total = len(read_list)
 
-    mapper = ReadMapper(ref)
-    # warmup pass over the full workload: compiles the seed/chain batch
-    # shape and the extension plans; the timed pass is steady-state
-    mapper.map_reads(reads.reads, reads.lens)
-    t0 = time.perf_counter()
-    recs = mapper.map_reads(reads.reads, reads.lens)
-    t_map = time.perf_counter() - t0
-    acc = _accuracy(recs, reads)
+    ladder: dict = {}
+    for mode in ("myers", "off"):
+        mapper = ReadMapper(ref, filter_mode=mode)
+        # warmup pass over the full workload: compiles the seed/chain
+        # batch shape and the screen/extension plans; the timed pass is
+        # steady-state
+        mapper.map_reads(read_list)
+        t0 = time.perf_counter()
+        recs = mapper.map_reads(read_list)
+        dt = time.perf_counter() - t0
+        acc = _accuracy(recs, reads, n_genuine)
+        junk_rejected = sum(1 for r in recs[n_genuine:]
+                            if not r.is_mapped) / max(n_junk, 1)
+        ladder[mode] = {"reads_per_s": n_total / dt, "accuracy": acc,
+                        "junk_rejected": junk_rejected}
+        emit(f"mapping/seed_extend/{mode}", dt / n_total,
+             f"reads_per_s={n_total / dt:.1f} acc={acc:.2f} "
+             f"junk_rejected={junk_rejected:.2f} n={n_total} ref={ref_len}")
+    # the ladder must never cost accuracy — it only skips DP that the
+    # extension-score gate would have rejected anyway
+    assert ladder["myers"]["accuracy"] >= ladder["off"]["accuracy"], ladder
+    per_read = 1.0 / ladder["myers"]["reads_per_s"]
+    cache = _cache_snapshot()
 
     # brute force: every read vs the full reference through the same
     # runtime (semiglobal score-only); extrapolate from a few reads
     spec, params = kernels_zoo.make("semiglobal")
     m = 2 if quick else 4
-    sample = [np.asarray(reads.reads[i, : reads.lens[i]]) for i in range(m)]
+    sample = [read_list[i] for i in range(m)]
     score_only(spec, params, sample[0], ref)          # compile
     t0 = time.perf_counter()
     for read in sample:
         score_only(spec, params, read, ref)
     t_bf = (time.perf_counter() - t0) / m
 
-    per_read = t_map / n_reads
-    emit("mapping/seed_extend", per_read,
-         f"reads_per_s={1.0 / per_read:.1f} acc={acc:.2f} "
-         f"n={n_reads} ref={ref_len}")
     emit("mapping/brute_force_dp", t_bf,
          f"reads_per_s={1.0 / t_bf:.2f} measured_on={m} "
          f"speedup={t_bf / per_read:.1f}x")
-    return {"reads_per_s": 1.0 / per_read, "accuracy": acc,
-            "n_reads": n_reads, "ref_len": ref_len,
-            "speedup_vs_brute_force": t_bf / per_read}
+    emit("mapping/plan_cache", 0.0,
+         f"size={cache['size']} hits={cache['hits']} "
+         f"misses={cache['misses']} ladder_plans={len(cache['ladder_plans'])}")
+    return {"reads_per_s": ladder["myers"]["reads_per_s"],
+            "accuracy": ladder["myers"]["accuracy"],
+            "ladder": ladder,
+            "ladder_speedup": (ladder["myers"]["reads_per_s"] /
+                               ladder["off"]["reads_per_s"]),
+            "n_genuine": n_genuine, "n_junk": n_junk, "ref_len": ref_len,
+            "speedup_vs_brute_force": t_bf / per_read,
+            "plan_cache": cache}
 
 
 if __name__ == "__main__":

@@ -16,7 +16,8 @@ import traceback
 from . import (bench_kernels_table2, bench_scaling_fig3,
                bench_vs_handcoded_fig45, bench_vs_software_fig6,
                bench_vs_naive_hls, bench_tiling, bench_bucketing,
-               bench_mapping, bench_serving, bench_fill, bench_pairhmm)
+               bench_mapping, bench_serving, bench_fill, bench_pairhmm,
+               bench_filter)
 
 SUITES = [
     ("Table 2 (15 kernels)", bench_kernels_table2),
@@ -30,6 +31,7 @@ SUITES = [
     ("Serving (sync vs pipelined drain)", bench_serving),
     ("Fill (strip-mined + packed tb)", bench_fill),
     ("Pair-HMM (forward + genotyping)", bench_pairhmm),
+    ("Filter ladder (myers vs full DP)", bench_filter),
 ]
 
 
@@ -58,6 +60,16 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", flush=True)
+        # the committed per-suite baselines (BENCH_fill.json etc.) are
+        # written here too, so a trajectory refresh is one command and
+        # the canonical files can't drift from the combined dump
+        # (full mode only — quick metrics are not baselines)
+        for modname, out in [] if args.quick else metrics.items():
+            short = modname.removeprefix("bench_")
+            path = f"BENCH_{short}.json"
+            with open(path, "w") as f:
+                json.dump({modname: out}, f, indent=2, sort_keys=True)
+            print(f"# wrote {path}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -15,3 +15,4 @@ python -m benchmarks.run --quick --only mapping
 python -m benchmarks.run --quick --only serving
 python -m benchmarks.run --quick --only fill   # packed/strip parity gate
 python -m benchmarks.run --quick --only pairhmm  # forward-oracle parity gate
+python -m benchmarks.run --quick --only filter   # myers bit-exactness gate

@@ -21,8 +21,12 @@ from . import types as T
 
 
 def run(spec: T.DPKernelSpec, params, query, ref, q_len=None,
-        r_len=None) -> T.DPResult:
+        r_len=None, *, xdrop=None) -> T.DPResult:
     assert spec.band is not None, "banded engine requires spec.band"
+    if xdrop is not None and spec.is_sum:
+        raise ValueError(
+            "xdrop prunes by a running best score; sum-semiring kernels "
+            "have no best to drop from")
     W = int(spec.band)
     Q, R = query.shape[0], ref.shape[0]
     L = spec.n_layers
@@ -48,7 +52,10 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None,
     vpe = jax.vmap(spec.pe, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))
 
     def body(carry, d):
-        prev2, prev, best, bi, bj = carry
+        if xdrop is None:
+            prev2, prev, best, bi, bj = carry
+        else:
+            prev2, prev, best, bi, bj, xbest = carry
         b = base(d)
         b1 = base(d - 1)     # base of prev diagonal
         b2 = base(d - 2)
@@ -81,6 +88,15 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None,
             (jnp.abs(i - j) <= W)
         newbuf = jnp.where(valid[:, None], scores, sent)
 
+        if xdrop is not None:
+            # X-drop: prune cells that fall more than xdrop behind the
+            # running best over all band cells — the effective band
+            # shrinks per pair, and the loop exits once it is empty
+            prim = newbuf[:, spec.primary_layer]
+            xbest = spec.combine(xbest, spec.reduce_best(prim))
+            thr = xbest + xdrop if spec.is_min else xbest - xdrop
+            newbuf = jnp.where(spec.better(thr, prim)[:, None], sent, newbuf)
+
         from .spec_utils import region_mask
         rmask = region_mask(spec, i, j, q_len, r_len)
         cand = jnp.where(rmask, newbuf[:, spec.primary_layer], sent)
@@ -95,13 +111,39 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None,
             best = jnp.where(upd, lane_best, best)
             bi = jnp.where(upd, b + lane_arg, bi)
             bj = jnp.where(upd, d - (b + lane_arg), bj)
-        return (prev, newbuf, best, bi, bj), None
+        out = (prev, newbuf, best, bi, bj)
+        if xdrop is not None:
+            out = out + (xbest,)
+        return out
 
     # d=0: only cell (0,0), at lane 0 (base(0)=0)
     buf_d0 = jnp.full((lanes, L), sent, dt).at[0].set(row0[0])
     buf_dm1 = jnp.full((lanes, L), sent, dt)
     carry0 = (buf_dm1, buf_d0, sent, jnp.int32(0), jnp.int32(0))
-    ds = jnp.arange(1, Q + R + 1, dtype=jnp.int32)
-    (_, _, best, bi, bj), _ = jax.lax.scan(body, carry0, ds)
+    if xdrop is not None:
+        carry0 = carry0 + (sent,)
+
+    # Early exit: every valid cell has i <= q_len and j <= r_len, so
+    # diagonals beyond q_len + r_len are all-sentinel no-ops — skipping
+    # them is bit-identical to the full Q+R scan this replaces.
+    live_d = jnp.minimum(q_len + r_len, jnp.int32(Q + R))
+
+    def cond(state):
+        d = state[0]
+        ok = d <= live_d
+        if xdrop is not None:
+            # both carried diagonals dead -> no new cell can come alive
+            live = jnp.any(spec.better(state[1][:, spec.primary_layer],
+                                       sent)) | \
+                jnp.any(spec.better(state[2][:, spec.primary_layer], sent))
+            ok = ok & live
+        return ok
+
+    def wbody(state):
+        d = state[0]
+        return (d + 1,) + body(state[1:], d)
+
+    final = jax.lax.while_loop(cond, wbody, (jnp.int32(1),) + carry0)
+    best, bi, bj = final[3], final[4], final[5]
     return T.DPResult(score=best, end_i=bi, end_j=bj, tb=None,
                       tb_layout="diag")

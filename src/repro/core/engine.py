@@ -74,7 +74,7 @@ def resolve_tb_pack(spec: T.DPKernelSpec, tb_pack: Optional[int]) -> int:
 
 def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
         *, strip: Optional[int] = None, tb_pack: Optional[int] = None,
-        live_bound=None) -> T.DPResult:
+        live_bound=None, xdrop: Optional[int] = None) -> T.DPResult:
     Q = query.shape[0]
     R = ref.shape[0]
     L = spec.n_layers
@@ -87,6 +87,10 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
     if strip < 1:
         raise ValueError(f"strip must be >= 1, got {strip}")
     pack = resolve_tb_pack(spec, tb_pack)
+    if xdrop is not None and spec.is_sum:
+        raise ValueError(
+            "xdrop prunes by a running best score; sum-semiring kernels "
+            "have no best to drop from")
 
     lanes = Q + 1
     i_idx = jnp.arange(lanes, dtype=jnp.int32)
@@ -110,7 +114,10 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
 
     def step(carry, d):
         """One anti-diagonal — the seed schedule, unchanged."""
-        prev2, prev, r_stream, best, bi, bj = carry
+        if xdrop is None:
+            prev2, prev, r_stream, best, bi, bj = carry
+        else:
+            prev2, prev, r_stream, best, bi, bj, xbest = carry
         # stream one reference char into lane 0
         new_char = jax.lax.dynamic_index_in_dim(
             ref, jnp.clip(d - 1, 0, R - 1), axis=0, keepdims=False)
@@ -134,6 +141,19 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
         on_col0 = (i_idx == d) & (d <= q_len)
         newbuf = jnp.where(on_row0[:, None], row_b[None, :], newbuf)
         newbuf = jnp.where(on_col0[:, None], col0, newbuf)
+
+        if xdrop is not None:
+            # X-drop adaptive band: cells whose primary-layer score falls
+            # more than ``xdrop`` behind the running best over *all*
+            # computed cells go sentinel — downstream neighbors read a
+            # dead cell and the live band shrinks per pair.  Approximate
+            # by design (a pruned cell could in principle have fed a
+            # comeback path); the fill terminates once no live cell
+            # remains (see ``cond`` below).
+            prim = newbuf[:, spec.primary_layer]
+            xbest = spec.combine(xbest, spec.reduce_best(prim))
+            thr = xbest + xdrop if spec.is_min else xbest - xdrop
+            newbuf = jnp.where(spec.better(thr, prim)[:, None], sent, newbuf)
 
         # §5.2 local-max bookkeeping over the objective region.
         if spec.region == T.REGION_CORNER and not spec.is_sum:
@@ -170,7 +190,10 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
             bj = jnp.where(upd, d - lane_arg, bj)
 
         tb_row = jnp.where(valid, ptr, jnp.uint8(0)) if with_tb else None
-        return (prev, newbuf, r_stream, best, bi, bj), tb_row
+        out = (prev, newbuf, r_stream, best, bi, bj)
+        if xdrop is not None:
+            out = out + (xbest,)
+        return out, tb_row
 
     def body(carry, d0):
         # strip-mined: 'strip' consecutive anti-diagonals per scan step,
@@ -207,7 +230,17 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
 
     def cond(state):
         s = state[0]
-        return s < live_steps
+        ok = s < live_steps
+        if xdrop is not None:
+            # stop once neither of the two carried diagonals holds a live
+            # cell (d+1 reads prev for up/left *and* prev2 for diag, so
+            # both must be dead before no new cell can come alive)
+            live = jnp.any(spec.better(state[1][0][:, spec.primary_layer],
+                                       sent)) | \
+                jnp.any(spec.better(state[1][1][:, spec.primary_layer],
+                                    sent))
+            ok = ok & live
+        return ok
 
     def wbody(state):
         s, carry, tb_buf = state
@@ -218,8 +251,11 @@ def run(spec: T.DPKernelSpec, params, query, ref, q_len=None, r_len=None,
         return s + 1, carry, tb_buf
 
     carry0 = (buf_dm1, buf_d0, r_diag0, sent, jnp.int32(0), jnp.int32(0))
-    _, (_, _, _, best, bi, bj), tb = jax.lax.while_loop(
+    if xdrop is not None:
+        carry0 = carry0 + (sent,)
+    _, final_carry, tb = jax.lax.while_loop(
         cond, wbody, (jnp.int32(0), carry0, tb0))
+    best, bi, bj = final_carry[3], final_carry[4], final_carry[5]
     layout = "diag" if pack == 1 else ("diag", pack)
     if with_tb:
         # one bulk packing pass over the whole store, not one per scan

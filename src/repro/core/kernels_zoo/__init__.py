@@ -1,10 +1,12 @@
 """The 15 Table-1 DP kernels, each a declarative spec on the shared back-end.
 
-Registry keys match the paper's '#' indices.
+Registry keys match the paper's '#' indices; #16/#17 are the unit-cost
+edit-distance kernels behind the myers bit-parallel filter ladder.
 """
 from __future__ import annotations
 
-from . import dna_linear, dna_affine, dna_two_piece, dtw, viterbi, profile, protein
+from . import (dna_linear, dna_affine, dna_two_piece, dtw, edit, viterbi,
+               profile, protein)
 
 # kernel_id -> (make_spec(**kw), default_params())
 KERNELS = {
@@ -23,6 +25,8 @@ KERNELS = {
     13: ("banded_global_two_piece", dna_two_piece.banded_global_two_piece, dna_two_piece.default_params),
     14: ("sdtw",                   dtw.sdtw,                        dtw.default_sdtw_params),
     15: ("protein_local",          protein.protein_local,           protein.default_params),
+    16: ("edit_distance",          edit.edit_distance,              edit.default_params),
+    17: ("edit_search",            edit.edit_search,                edit.default_params),
 }
 
 BY_NAME = {name: (mk, dp) for (name, mk, dp) in KERNELS.values()}

@@ -1,0 +1,58 @@
+"""Kernels #16/#17 — unit-cost edit distance (Levenshtein), min-objective.
+
+These are the scoring front-ends of the filter ladder: ``edit_distance``
+is the global (corner) Levenshtein distance, ``edit_search`` the
+semiglobal variant (query end-to-end against the best reference
+substring — free start/end in the reference, the classic "approximate
+string search" formulation).  Both are score-only, single-layer,
+unit-cost kernels, so any generic engine can run them (the minplus
+semiring already exists) — and the ``myers`` bit-parallel engine runs
+them 64 (or 32) DP cells per machine word.
+
+``default_params`` carries ``max_dist``: the k-threshold the ``myers``
+engine honors (distance > k reports the kernel sentinel and the column
+loop exits as soon as the bound is provably exceeded).  ``max_dist < 0``
+disables thresholding.  Generic engines ignore it — the DP itself is
+parameter-free.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import types as T
+
+
+def default_params(max_dist: int = -1):
+    return {"max_dist": jnp.int32(max_dist)}
+
+
+def _edit_pe(params, q, r, diag, up, left, i, j):
+    m = diag[0] + jnp.where(q == r, 0, 1)
+    best = jnp.minimum(m, jnp.minimum(up[0] + 1, left[0] + 1))
+    return best[None], jnp.int32(0)
+
+
+def _unit_init(params, k):
+    return jnp.asarray(k, jnp.int32)[..., None]
+
+
+def _zeros_init(params, k):
+    return jnp.zeros(jnp.shape(k) + (1,), jnp.int32)
+
+
+def edit_distance(**kw) -> T.DPKernelSpec:
+    """#16 global Levenshtein distance: D[0][j] = j, D[i][0] = i,
+    optimum at the corner."""
+    return T.DPKernelSpec(
+        name="edit_distance", n_layers=1, pe=_edit_pe,
+        init_row=_unit_init, init_col=_unit_init,
+        objective="min", region=T.REGION_CORNER, **kw)
+
+
+def edit_search(**kw) -> T.DPKernelSpec:
+    """#17 semiglobal Levenshtein: free start/end in the reference
+    (D[0][j] = 0, optimum in the last row) — the pre-filter shape."""
+    return T.DPKernelSpec(
+        name="edit_search", n_layers=1, pe=_edit_pe,
+        init_row=_zeros_init, init_col=_unit_init,
+        objective="min", region=T.REGION_LAST_ROW, **kw)

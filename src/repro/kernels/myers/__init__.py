@@ -1,0 +1,1 @@
+"""Pallas kernel for the Myers bit-parallel edit-distance engine."""

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel for the Myers bit-vector column sweep.
+
+Hardware mapping: one whole query column of DP cells is delta-encoded in
+``n_words`` 32-bit VP/VN words (TPU vector units carry no 64-bit ints),
+and the reference streams through a ``fori_loop`` one column per step —
+the systolic character stream of the wavefront kernel, except each
+"PE" here is a machine word covering 32 DP rows of bitwise ops.
+
+The word loop is unrolled in Python (``n_words`` is static and small:
+a 512-bucket is 16 words); words couple only through the scalar
+horizontal delta ``hin``/``hout``, so the unrolled chain is a short
+scalar recurrence over vector-register-resident words, not a carry
+chain.  The per-column Eq gather is hoisted to XLA (ops.py builds the
+``(R, n_words)`` column table), keeping the kernel free of dynamic
+2-D gathers.
+
+The column loop runs to ``r_len`` (dynamic ``fori_loop`` bound — the
+bucket padding is never paid) but does not replicate the XLA engine's
+k-threshold early exit; ops.py applies the same k-saturation sentinel
+to the result, so the two variants agree bit for bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
+
+WORD_BITS = 32
+_WT = jnp.uint32
+
+
+def _advance_scalar(hin, vp, vn, eq):
+    """One 32-bit word of one column (scalar variant of
+    ``core.myers._advance_word``)."""
+    one = jnp.asarray(1, _WT)
+    zero = jnp.asarray(0, _WT)
+    hin_neg = jnp.where(hin < 0, one, zero)
+    hin_pos = jnp.where(hin > 0, one, zero)
+    xv = eq | vn
+    eq = eq | hin_neg
+    xh = (((eq & vp) + vp) ^ vp) | eq
+    ph = vn | ~(xh | vp)
+    mh = vp & xh
+    top = jnp.asarray(WORD_BITS - 1, _WT)
+    hout = ((ph >> top) & one).astype(jnp.int32) - \
+        ((mh >> top) & one).astype(jnp.int32)
+    ph_s = (ph << 1) | hin_pos
+    mh_s = (mh << 1) | hin_neg
+    vp_out = mh_s | ~(xv | ph_s)
+    vn_out = ph_s & xv
+    return hout, vp_out, vn_out, ph, mh
+
+
+def _kernel_body(glob, n_words, sent,
+                 lens_ref, eq_ref, score_ref, best_ref, bj_ref):
+    q_len = lens_ref[0]
+    r_len = lens_ref[1]
+    wb = WORD_BITS
+    sw = jnp.clip((q_len - 1) // wb, 0, n_words - 1)
+    sb = jnp.asarray(jnp.clip((q_len - 1) % wb, 0, wb - 1), _WT)
+    hin0 = jnp.int32(1) if glob else jnp.int32(0)
+    one = jnp.asarray(1, _WT)
+
+    def col(j, carry):
+        vp, vn, score, best, bj = carry
+        eq_col = pl.load(eq_ref, (pl.ds(j, 1), slice(None)))[0]  # (n_words,)
+        hin = hin0
+        new_vp, new_vn = [], []
+        inc = jnp.int32(0)
+        for w in range(n_words):           # static unroll; scalar hin chain
+            hout, vpo, vno, ph, mh = _advance_scalar(
+                hin, vp[w], vn[w], eq_col[w])
+            new_vp.append(vpo)
+            new_vn.append(vno)
+            d = ((ph >> sb) & one).astype(jnp.int32) - \
+                ((mh >> sb) & one).astype(jnp.int32)
+            inc = jnp.where(sw == w, d, inc)
+            hin = hout
+        vp = jnp.stack(new_vp)
+        vn = jnp.stack(new_vn)
+        score = score + inc
+        if not glob:
+            upd = score < best             # strict: first argmin wins
+            best = jnp.where(upd, score, best)
+            bj = jnp.where(upd, j + 1, bj)
+        return vp, vn, score, best, bj
+
+    init = (~jnp.zeros((n_words,), _WT), jnp.zeros((n_words,), _WT),
+            q_len, jnp.int32(sent), jnp.int32(0))
+    _, _, score, best, bj = jax.lax.fori_loop(0, r_len, col, init)
+    score_ref[0] = score
+    best_ref[0] = best
+    bj_ref[0] = bj
+
+
+def myers_fill(eq_cols, lens, *, glob: bool, n_words: int, sent: int,
+               interpret: bool = False):
+    """Launch the column sweep.
+
+    ``eq_cols``: (R, n_words) uint32 per-column match words (ops.py
+    gathers ``peq[ref[j]]``); ``lens``: (2,) int32 ``[q_len, r_len]``.
+    Returns (score, best, bj), each (1,) int32 — corner score, last-row
+    minimum and its first-argmin column.
+    """
+    R = eq_cols.shape[0]
+    kernel = functools.partial(_kernel_body, glob, n_words, sent)
+    fn = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # lens
+            pl.BlockSpec((R, n_words), lambda c: (0, 0)),     # eq_cols
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda c: (0,)),
+            pl.BlockSpec((1,), lambda c: (0,)),
+            pl.BlockSpec((1,), lambda c: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )
+    return fn(jnp.asarray(lens, jnp.int32), eq_cols)

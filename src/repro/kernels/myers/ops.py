@@ -1,0 +1,46 @@
+"""jit'd wrapper around the Pallas Myers kernel: Peq/column-table prep in
+XLA, launch, and the same result contract as ``core.myers.run`` (empty
+pairs -> sentinel, k-saturation sentinel, first-argmin search end).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as T
+from repro.core import myers as M
+from . import kernel as K
+
+
+def run(spec, params, query, ref, q_len=None, r_len=None,
+        interpret: bool = False) -> T.DPResult:
+    M._check_spec(spec)
+    Q, R = query.shape[0], ref.shape[0]
+    q_len = jnp.asarray(Q if q_len is None else q_len, jnp.int32)
+    r_len = jnp.asarray(R if r_len is None else r_len, jnp.int32)
+    wb = K.WORD_BITS
+    n_words = max(1, -(-Q // wb))
+    sent = spec.sentinel()
+    glob = spec.region == T.REGION_CORNER
+    k = jnp.asarray(params.get("max_dist", -1), jnp.int32)
+    unlimited = k < 0
+
+    # XLA-side prep: symbol table, then the per-column gather the kernel
+    # would otherwise do as a dynamic 2-D load per step
+    peq = M.build_peq(query, q_len, n_words, word_dtype=jnp.uint32)
+    eq_cols = jnp.take(peq, jnp.clip(ref.astype(jnp.int32), 0,
+                                     M.N_SYMBOLS - 1), axis=0)
+
+    score, best, bj = K.myers_fill(
+        eq_cols, jnp.stack([q_len, r_len]), glob=glob, n_words=n_words,
+        sent=1 << 30, interpret=interpret)   # static min-objective sentinel
+
+    raw = score[0] if glob else best[0]
+    dist = jnp.where(~unlimited & (raw > k), sent, raw)
+    ok = (q_len >= 1) & (r_len >= 1)
+    dist = jnp.where(ok, dist, sent)
+    live = ok & (dist < sent)
+    end_i = jnp.where(live, q_len, jnp.int32(0))
+    end_j = jnp.where(live, r_len if glob else bj[0], jnp.int32(0))
+    return T.DPResult(score=dist.astype(spec.score_dtype), end_i=end_i,
+                      end_j=end_j, tb=None, tb_layout="diag")

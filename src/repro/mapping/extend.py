@@ -27,6 +27,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.kernels_zoo import dna_affine, dna_linear
+from repro.core.kernels_zoo import edit as edit_kernel
 from repro.runtime import bucketing, dispatch
 
 from . import chain as chain_mod
@@ -64,6 +65,40 @@ def match_bonus(gap_mode: str = "linear") -> float:
     gate in pipeline.py)."""
     params = AFFINE_EXTEND_PARAMS if gap_mode == "affine" else EXTEND_PARAMS
     return float(params["match"])
+
+
+# the filter-ladder screen kernel: one module-level spec object so every
+# screen batch lands on the same plan-cache keys (like _SPECS above)
+SCREEN_SPEC = edit_kernel.edit_search()
+
+
+def screen_jobs(jobs: list, *, k_frac: float = 0.35,
+                engine_name: str = "myers", block: int = 64,
+                pipeline_depth: int = 2) -> list:
+    """Bit-parallel pre-filter over extension jobs; ``True`` = survivor.
+
+    Each (read, window) pair runs the thresholded ``edit_search`` kernel
+    on the cheap engine: a placement whose best edit distance exceeds
+    ``ceil(k_frac * read_len)`` cannot survive the extension-score gate,
+    so full DP never runs on it.  One engine-side threshold (the batch
+    max) keeps a single plan per bucket; the per-job cut is exact and
+    applied host-side.
+
+    ``block`` defaults wider than the extension block: the bit-parallel
+    engine is dispatch-bound on CPU (tiny per-op tensors), so the screen
+    — score-only, no traceback memory to budget — wants the widest batch
+    the job list can fill.
+    """
+    if not jobs:
+        return []
+    ks = [int(np.ceil(k_frac * len(j.read))) for j in jobs]
+    params = edit_kernel.default_params(max(ks))
+    pairs = [(j.read, j.window) for j in jobs]
+    outs = dispatch.run_pairs(SCREEN_SPEC, params, pairs,
+                              engine_name=engine_name, block=block,
+                              with_traceback=False,
+                              pipeline_depth=pipeline_depth)
+    return [float(o.score) <= k for o, k in zip(outs, ks)]
 
 
 @dataclasses.dataclass

@@ -59,7 +59,9 @@ class ReadMapper:
                  min_chain_score: float = 12.0,
                  min_extend_frac: float = 0.25,
                  engine_name: str = "wavefront", rname: str = "ref",
-                 pipeline_depth: int = 2, gap_mode: str = "linear"):
+                 pipeline_depth: int = 2, gap_mode: str = "linear",
+                 filter_mode: str = "myers", filter_k_frac: float = 0.35,
+                 filter_engine: str = "myers", screen_block: int = 64):
         self.ref = np.asarray(ref, np.uint8)
         self.index = index_mod.build_index(self.ref, k=k, w=w)
         self.margin = margin
@@ -75,6 +77,19 @@ class ReadMapper:
             raise ValueError(
                 f"unknown gap_mode {gap_mode!r}; have {extend_mod.GAP_MODES}")
         self.gap_mode = gap_mode
+        # filter ladder: 'myers' screens every extension candidate with
+        # the thresholded bit-parallel edit_search before full DP runs
+        # ('off' = extend every candidate, the pre-ladder path)
+        if filter_mode not in ("myers", "off"):
+            raise ValueError(
+                f"unknown filter_mode {filter_mode!r}; have ('myers', 'off')")
+        self.filter_mode = filter_mode
+        self.filter_k_frac = filter_k_frac
+        self.filter_engine = filter_engine
+        # the screen batches wider than extension: it is score-only (no
+        # traceback memory) and the bit-parallel engine pays per-dispatch
+        # overhead, not per-cell
+        self.screen_block = screen_block
         # reads pad to at least one full minimizer window
         self._read_min_bucket = bucketing.bucket_length(k + w)
         self._seed_chain = jax.jit(functools.partial(
@@ -157,6 +172,25 @@ class ReadMapper:
             flag = sam_mod.FLAG_REVERSE if use_rc else 0
             jobs.append(job)
             job_meta.append((i, flag, oriented, mapq, f1))
+
+        if self.filter_mode == "myers" and jobs:
+            # ladder rung 1: the cheap bit-parallel screen — candidates
+            # whose best edit distance already exceeds the k-budget can
+            # never pass the extension-score gate, so full DP (rung 2)
+            # only runs on survivors
+            keep = extend_mod.screen_jobs(
+                jobs, k_frac=self.filter_k_frac,
+                engine_name=self.filter_engine, block=self.screen_block,
+                pipeline_depth=self.pipeline_depth)
+            kept_jobs, kept_meta = [], []
+            for job, meta, ok in zip(jobs, job_meta, keep):
+                if ok:
+                    kept_jobs.append(job)
+                    kept_meta.append(meta)
+                else:
+                    i = meta[0]
+                    records[i] = sam_mod.unmapped(names[i], read_list[i])
+            jobs, job_meta = kept_jobs, kept_meta
 
         ext = extend_mod.extend_jobs(jobs, engine_name=self.engine_name,
                                      block=self.block,

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -64,6 +65,7 @@ class PlanKey:
     strip: int = 1                   # anti-diagonals per scan step
     tb_pack: int = 1                 # traceback pointers packed per byte
     semiring: str = "maxplus"        # path algebra: maxplus|minplus|logsumexp
+    xdrop: Optional[int] = None      # X-drop early termination; None = off
 
 
 class CompiledPlan:
@@ -81,6 +83,8 @@ class CompiledPlan:
         self.key = key
         self.spec = spec
         self.calls = 0
+        self.hits = 0          # cache hits after the initial miss
+        self.compile_s = None  # trace+compile wall time of the first call
         engine_fn = registry.get_engine(engine_name)
         eng_opts = registry.engine_options(engine_name)
         # forward the plan's resolved schedule knobs (strip, tb_pack) to
@@ -169,6 +173,13 @@ class CompiledPlan:
             q_len = jnp.asarray(q_len, jnp.int32)
             r_len = jnp.asarray(r_len, jnp.int32)
         self.calls += 1
+        if self.compile_s is None:
+            # first dispatch pays trace + compile synchronously; time it
+            # (execution stays async, so this is compile-dominated)
+            t0 = time.perf_counter()
+            out = self._fn(params, query, ref, q_len, r_len)
+            self.compile_s = time.perf_counter() - t0
+            return out
         return self._fn(params, query, ref, q_len, r_len)
 
     def __repr__(self):
@@ -191,36 +202,75 @@ def _placement(mesh, mesh_axis: str) -> Optional[str]:
     return f"{mesh_axis}@{dims}"
 
 
+# neutral pins for undeclared knobs — the cache never splits on options
+# an engine ignores
+_NEUTRAL_OPTS = {"strip": 1, "tb_pack": 1, "xdrop": None}
+
+
+def resolve_engine_options(spec: T.DPKernelSpec, engine_name: str,
+                           requested: Optional[dict] = None) -> dict:
+    """Resolve every schedule knob an engine declares against a request.
+
+    ``requested`` maps option name -> value; ``None`` values mean "use
+    the engine default" — a per-backend dict (``{'cpu': ..., 'default':
+    ...}``) resolves against ``jax.default_backend()``, and ``tb_pack``
+    falls back to the kernel's natural packing ``spec.tb_pack``
+    (8 // ptr_bits).  Option names the engine does not declare raise
+    immediately, listing the valid choices — instead of surfacing as an
+    unexpected-keyword TypeError deep inside the fill.  Undeclared knobs
+    resolve to their neutral value so every PlanKey field is populated.
+    """
+    sup = registry.engine_options(engine_name)
+    req = {k: v for k, v in dict(requested or {}).items() if v is not None}
+    plan_knobs = {k for k, v in sup.items() if v != "dynamic"}
+    unknown = sorted(set(req) - plan_knobs)
+    if unknown:
+        valid = sorted(plan_knobs)
+        raise ValueError(
+            f"engine {engine_name!r} does not accept option(s) {unknown}; "
+            f"valid options: {valid if valid else '(none)'}")
+    out = dict(_NEUTRAL_OPTS)
+    for name in plan_knobs:
+        default = sup[name]
+        if name == "strip":
+            strip = req.get("strip")
+            if strip is None:
+                strip = default
+                if isinstance(strip, dict):
+                    strip = strip.get(jax.default_backend(),
+                                      strip["default"])
+            out["strip"] = int(strip)
+            if out["strip"] < 1:
+                raise ValueError(f"strip must be >= 1, got {out['strip']}")
+        elif name == "tb_pack":
+            if spec.traceback is None:
+                out["tb_pack"] = 1
+                continue
+            from repro.core.engine import resolve_tb_pack
+            tb_pack = req.get("tb_pack")
+            if tb_pack is None and default is not None:
+                tb_pack = default
+            out["tb_pack"] = resolve_tb_pack(spec, tb_pack)  # one validator
+        elif name == "xdrop":
+            xdrop = req.get("xdrop", default)
+            if xdrop is not None:
+                xdrop = int(xdrop)
+                if xdrop < 0:
+                    raise ValueError(f"xdrop must be >= 0, got {xdrop}")
+            out["xdrop"] = xdrop
+        else:
+            out[name] = req.get(name, default)
+    return out
+
+
 def resolve_engine_opts(spec: T.DPKernelSpec, engine_name: str,
                         strip: Optional[int] = None,
                         tb_pack: Optional[int] = None) -> tuple[int, int]:
-    """Resolve the (strip, tb_pack) schedule knobs for one engine.
-
-    Engines that don't declare a knob pin it to 1 (so the cache never
-    splits on options an engine ignores); ``None`` takes the engine's
-    registered default — a per-backend dict (``{'cpu': ..., 'default':
-    ...}``) resolves against ``jax.default_backend()`` — with ``tb_pack``
-    falling back to the kernel's natural packing ``spec.tb_pack``
-    (8 // ptr_bits).
-    """
-    sup = registry.engine_options(engine_name)
-    strip_r = 1
-    if "strip" in sup:
-        if strip is None:
-            strip = sup["strip"]
-            if isinstance(strip, dict):
-                strip = strip.get(jax.default_backend(), strip["default"])
-        strip_r = int(strip)
-        if strip_r < 1:
-            raise ValueError(f"strip must be >= 1, got {strip_r}")
-    pack_r = 1
-    if "tb_pack" in sup and spec.traceback is not None:
-        from repro.core.engine import resolve_tb_pack
-        default = sup["tb_pack"]
-        if tb_pack is None and default is not None:
-            tb_pack = default
-        pack_r = resolve_tb_pack(spec, tb_pack)   # one validation source
-    return strip_r, pack_r
+    """Back-compat shim: the (strip, tb_pack) pair from
+    :func:`resolve_engine_options`."""
+    r = resolve_engine_options(spec, engine_name,
+                               {"strip": strip, "tb_pack": tb_pack})
+    return r["strip"], r["tb_pack"]
 
 
 # lane-strip height of the Pallas kernel's ('chunk', n_pe) tb layout;
@@ -259,7 +309,8 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
              with_traceback: bool = True, mode: str = "align",
              donate: bool = False, mesh=None,
              mesh_axis: str = "data", strip: Optional[int] = None,
-             tb_pack: Optional[int] = None) -> CompiledPlan:
+             tb_pack: Optional[int] = None,
+             xdrop: Optional[int] = None) -> CompiledPlan:
     """Fetch (or build) the shared plan for one bucketed input shape.
 
     ``q_shape``/``r_shape`` are per-pair shapes including char dims (the
@@ -271,23 +322,29 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
     ``kernels_zoo.make`` call share; distinct constructions do not —
     their closures could differ).
 
-    ``strip`` (anti-diagonals per scan step) and ``tb_pack`` (pointers
-    per traceback byte) select the engine schedule; ``None`` resolves the
-    engine/kernel defaults (strip-mined, packed).  Engines that don't
-    declare a knob ignore it without splitting the cache.
+    ``strip`` (anti-diagonals per scan step), ``tb_pack`` (pointers per
+    traceback byte) and ``xdrop`` (X-drop early termination) select the
+    engine schedule; ``None`` resolves the engine/kernel defaults
+    (strip-mined, packed, no X-drop).  Passing a non-``None`` value for
+    an option the engine does not declare raises, listing the valid
+    choices.
     """
     wtb = bool(with_traceback and spec.traceback is not None)
-    strip_r, pack_r = resolve_engine_opts(spec, engine_name, strip, tb_pack)
+    opts = resolve_engine_options(
+        spec, engine_name,
+        {"strip": strip, "tb_pack": tb_pack, "xdrop": xdrop})
+    strip_r, pack_r, xdrop_r = opts["strip"], opts["tb_pack"], opts["xdrop"]
     if jax.default_backend() == "cpu":
         donate = False   # donation is a no-op on CPU; don't split the cache
     if mesh is None:
         mesh_axis = "data"   # axis is meaningless un-sharded; don't split
     cache_key = (spec, engine_name, tuple(q_shape), tuple(r_shape),
                  batch_size, wtb, mode, donate, mesh, mesh_axis,
-                 strip_r, pack_r)
+                 strip_r, pack_r, xdrop_r)
     plan = _CACHE.get(cache_key)
     if plan is not None:
         _STATS["hits"] += 1
+        plan.hits += 1
         return plan
     with _LOCK:
         plan = _CACHE.get(cache_key)
@@ -298,19 +355,26 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
                           batch_size=batch_size, with_traceback=wtb,
                           mode=mode, placement=_placement(mesh, mesh_axis),
                           strip=strip_r, tb_pack=pack_r,
-                          semiring=spec.semiring.name)
+                          semiring=spec.semiring.name, xdrop=xdrop_r)
             plan = CompiledPlan(key, spec, engine_name, donate=donate,
                                 mesh=mesh, mesh_axis=mesh_axis)
             _CACHE[cache_key] = plan
         else:
             _STATS["hits"] += 1
+            plan.hits += 1
     return plan
 
 
 def plan_cache_info() -> dict[str, Any]:
+    """Cache-wide totals plus per-plan observability: each entry of
+    ``plans`` carries the PlanKey, its cache ``hits`` (after the initial
+    miss), dispatch ``calls``, and first-call ``compile_s``."""
+    plans = [{"key": p.key, "hits": p.hits, "calls": p.calls,
+              "compile_s": p.compile_s} for p in _CACHE.values()]
     return {"size": len(_CACHE), "hits": _STATS["hits"],
             "misses": _STATS["misses"],
-            "keys": [p.key for p in _CACHE.values()]}
+            "keys": [p.key for p in _CACHE.values()],
+            "plans": plans}
 
 
 def clear_plan_cache() -> None:

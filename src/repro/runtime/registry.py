@@ -112,6 +112,18 @@ def _load_pallas(interpret: bool):
     return functools.partial(wops.run, interpret=interpret)
 
 
+def _load_myers():
+    from repro.core import myers
+    return myers.run
+
+
+def _load_myers_pallas(interpret: bool):
+    import functools
+
+    from repro.kernels.myers import ops as mops
+    return functools.partial(mops.run, interpret=interpret)
+
+
 register_engine("reference", loader=_load_reference,
                 doc="row-major oracle (C-simulation analogue)")
 # the per-backend strip default lives with the engine (one source of
@@ -122,14 +134,25 @@ register_engine("wavefront", loader=_load_wavefront,
                 doc="anti-diagonal scan back-end (paper §5.1)",
                 # strip: per-backend dict resolved at plan time.
                 # live_bound is a *dynamic* argument (shared batch fill
-                # bound), not a compile-time cache knob
+                # bound), not a compile-time cache knob.  xdrop: X-drop
+                # early termination; None = run to completion.
                 options={"strip": STRIP_DEFAULTS,
-                         "tb_pack": None, "live_bound": "dynamic"})
+                         "tb_pack": None, "live_bound": "dynamic",
+                         "xdrop": None})
 register_engine("banded", loader=_load_banded,
-                doc="O(n*W) band-packed lanes, score-only")
+                doc="O(n*W) band-packed lanes, score-only",
+                options={"xdrop": None})
 register_engine("pallas", loader=lambda: _load_pallas(False),
                 doc="Pallas TPU kernel of the wavefront schedule",
                 options={"tb_pack": None})
 register_engine("pallas_interpret", loader=lambda: _load_pallas(True),
                 doc="Pallas kernel in interpreter mode (CPU-testable)",
                 options={"tb_pack": None})
+register_engine("myers", loader=_load_myers,
+                doc="bit-parallel unit-cost edit distance (Myers 1999), "
+                    "64/32 DP cells per word; kernels #16/#17 only")
+register_engine("myers_pallas", loader=lambda: _load_myers_pallas(False),
+                doc="Pallas TPU kernel of the Myers bit-vector recurrence")
+register_engine("myers_pallas_interpret",
+                loader=lambda: _load_myers_pallas(True),
+                doc="Myers Pallas kernel in interpreter mode (CPU-testable)")

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batch as core_batch, kernels_zoo
+from repro.core.kernels_zoo import edit as edit_kernel
 from repro.core.traceback import moves_to_cigar, raise_if_truncated
 from repro.ft import DEAD, HeartbeatMonitor
 from repro.runtime import bucketing
@@ -97,6 +98,10 @@ class InflightBatch:
 
 QueueKey = Tuple[str, Tuple[int, int]]   # (kernel, (q_bucket, r_bucket))
 
+# serving-side filter ladder: one module-level screen spec so every
+# prefilter batch lands on the same plan-cache keys
+_PREFILTER_SPEC = edit_kernel.edit_search()
+
 
 class ServiceOverloaded(RuntimeError):
     """``submit`` under ``backpressure='raise'``: the in-flight budget
@@ -142,7 +147,9 @@ class AlignmentService:
                  coalesce: bool = True, pipeline_depth: int = 2,
                  tb_budget_bytes: Optional[int] = None, max_block: int = 256,
                  max_pending: Optional[int] = None,
-                 backpressure: str = "block"):
+                 backpressure: str = "block",
+                 prefilter: Optional[float] = None,
+                 prefilter_engine: str = "myers"):
         if backpressure not in ("block", "raise"):
             raise ValueError(
                 f"backpressure must be 'block' or 'raise', got {backpressure!r}")
@@ -165,6 +172,17 @@ class AlignmentService:
         self.mesh = mesh
         self.engine_name = engine_name
         self.with_traceback = with_traceback
+        # filter ladder (opt-in): ``prefilter=frac`` screens every batch
+        # with the thresholded bit-parallel edit_search before the main
+        # plan — requests whose best edit distance exceeds
+        # ceil(frac * query_len) resolve immediately with
+        # ``{'filtered': True}`` and never pay full DP.  Only uint8
+        # scalar-code channels are screened; None = no behavior change.
+        if prefilter is not None and not 0.0 < prefilter < 1.0:
+            raise ValueError(
+                f"prefilter must be a fraction in (0, 1), got {prefilter}")
+        self.prefilter = prefilter
+        self.prefilter_engine = prefilter_engine
         self.queues: Dict[QueueKey, List[AlignRequest]] = {}
         self.channels: Dict[str, tuple] = {}   # kernel -> (spec, params, fn)
         self.monitor = HeartbeatMonitor(dead_after=redispatch_after)
@@ -349,6 +367,43 @@ class AlignmentService:
                             min(block, self.block_for(kernel, bucket)))
         return kernel, bucket, reqs, coalesced, block
 
+    # -- the prefilter rung ------------------------------------------------
+    def _screenable(self, spec) -> bool:
+        """The edit screen only reads uint8 scalar symbol codes; channels
+        with per-position channels (profiles, DTW floats) pass through."""
+        return (self.prefilter is not None and spec.char_shape == ()
+                and np.dtype(jnp.dtype(spec.char_dtype).name) == np.uint8)
+
+    def _prefilter_batch(self, spec, reqs, bucket, qs, rs, ql, rl, block):
+        """Screen one padded batch with thresholded bit-parallel
+        edit_search; rejects resolve immediately with ``filtered: True``
+        and the channel-sentinel score.  One engine-side threshold (the
+        batch max) keeps a single screen plan per bucket; the exact
+        per-request cut ``ceil(prefilter * query_len)`` applies host-side.
+        """
+        ks = [int(np.ceil(self.prefilter * len(r.query))) for r in reqs]
+        params = edit_kernel.default_params(max(ks))
+        screen = plan_mod.get_plan(
+            _PREFILTER_SPEC, self.prefilter_engine,
+            qs.shape[1:], rs.shape[1:], batch_size=block,
+            with_traceback=False, mode="fill")
+        out = screen(params, jnp.asarray(qs), jnp.asarray(rs),
+                     jnp.asarray(ql), jnp.asarray(rl))
+        dist = np.asarray(out.score)[: len(reqs)]   # sync: screen is cheap
+        sent = float(spec.sentinel())
+        survivors = []
+        for r, d, k in zip(reqs, dist, ks):
+            if float(d) <= k:
+                survivors.append(r)
+            else:
+                r.result = {"score": sent, "end": (0, 0), "filtered": True}
+                self._pending -= 1
+        if len(survivors) != len(reqs):
+            qs, rs, ql, rl = self._pad_batch(survivors, bucket,
+                                             spec.char_shape, qs.dtype,
+                                             block)
+        return survivors, qs, rs, ql, rl
+
     # -- launch / harvest (the two pipeline stages) ------------------------
     def _launch(self, worker: str, item) -> InflightBatch:
         """Pad one batch and enqueue it on the device (non-blocking under
@@ -361,6 +416,22 @@ class AlignmentService:
             qs, rs, ql, rl = self._pad_batch(
                 reqs, bucket, spec.char_shape,
                 np.dtype(jnp.dtype(spec.char_dtype).name), block)
+            if self._screenable(spec):
+                # ladder rung 1: rejects resolve here; only survivors
+                # (rebound into ``reqs`` so a failing main launch
+                # requeues exactly the requests still owed a result)
+                # pay the full plan below
+                reqs, qs, rs, ql, rl = self._prefilter_batch(
+                    spec, reqs, bucket, qs, rs, ql, rl, block)
+                if not reqs:
+                    ib = InflightBatch(worker=worker, kernel=kernel,
+                                       bucket=bucket, reqs=[], gens=[],
+                                       out=None, cancelled=True)
+                    self.inflight.setdefault(worker, []).append(ib)
+                    self.dispatches.append({"kernel": kernel,
+                                            "bucket": bucket, "n": 0,
+                                            "coalesced": coalesced})
+                    return ib
             if sharded_fn is not None:
                 out = sharded_fn(params, jnp.asarray(qs), jnp.asarray(rs),
                                  jnp.asarray(ql), jnp.asarray(rl))

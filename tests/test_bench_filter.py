@@ -1,0 +1,32 @@
+"""bench_filter gates: quick parity in tier-1, full sweep as slow."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import bench_filter  # noqa: E402
+
+
+def test_quick_parity_gate():
+    """--quick mode: the myers-vs-exact bit-exactness gate (both edit
+    kernels, both threshold modes); timing is skipped."""
+    metrics = bench_filter.run(quick=True)
+    assert metrics["parity_pairs"] >= 64
+
+
+@pytest.mark.slow
+def test_full_sweep_meets_targets():
+    """Full GCUPS sweep + ladder comparison.  The sweep itself asserts
+    the >= 10x myers-vs-wavefront floor at buckets >= 256 (after
+    asserting bit-identity on the timed blocks) and the ladder asserts
+    unchanged genuine-read accuracy; here we additionally pin the
+    headline shape the committed BENCH_filter.json baseline carries."""
+    metrics = bench_filter.run(quick=False)
+    by_bucket = {c["bucket"]: c for c in metrics["cells"]}
+    assert by_bucket[256]["speedup"] >= bench_filter.GCUPS_FACTOR
+    assert by_bucket[512]["speedup"] >= bench_filter.GCUPS_FACTOR
+    assert metrics["ladder"]["myers"]["junk_rejected"] == 1.0
