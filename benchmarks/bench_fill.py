@@ -47,6 +47,10 @@ from .common import emit, kernel_batch
 MEM_BUDGET = 256 << 20          # fixed traceback-memory budget (bytes)
 MEM_BUCKET = 4096               # bucket for the in-flight batch headline
 
+# headline metrics run.py --compare regression-checks (dotted paths)
+HEADLINES = {"best_speedup_bucket_le_512": "higher",
+             "mem.global_linear.batch_ratio": "higher"}
+
 
 def _seed_fn(spec, engine_name, bucket):
     """The seed executable: vmapped fill + while-loop traceback at

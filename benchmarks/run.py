@@ -5,6 +5,12 @@ stderr-free stdout comments).  ``--quick`` shrinks sizes for CI.
 ``--json out.json`` additionally dumps each suite's headline metrics
 (whatever dict its ``run()`` returns) — the perf-trajectory artifact
 (e.g. the committed ``BENCH_fill.json`` baseline).
+
+``--compare BENCH_<name>.json`` diffs the fresh run against a committed
+baseline: each suite module may declare ``HEADLINES = {dotted.path:
+"higher"|"lower"}`` naming the metrics that constitute its perf
+contract, and a headline moving >20% the wrong way fails the run
+(exit 1).  Non-headline metrics are informational and never gate.
 """
 from __future__ import annotations
 
@@ -17,7 +23,7 @@ from . import (bench_kernels_table2, bench_scaling_fig3,
                bench_vs_handcoded_fig45, bench_vs_software_fig6,
                bench_vs_naive_hls, bench_tiling, bench_bucketing,
                bench_mapping, bench_serving, bench_fill, bench_pairhmm,
-               bench_filter)
+               bench_filter, bench_autotune)
 
 SUITES = [
     ("Table 2 (15 kernels)", bench_kernels_table2),
@@ -32,7 +38,55 @@ SUITES = [
     ("Fill (strip-mined + packed tb)", bench_fill),
     ("Pair-HMM (forward + genotyping)", bench_pairhmm),
     ("Filter ladder (myers vs full DP)", bench_filter),
+    ("Autotune (sweep + warm boot)", bench_autotune),
 ]
+
+# a headline may regress by this fraction before --compare fails
+COMPARE_TOLERANCE = 0.20
+
+
+def _resolve(metrics, dotted: str):
+    cur = metrics
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def compare_metrics(fresh: dict, baseline: dict,
+                    tolerance: float = COMPARE_TOLERANCE) -> int:
+    """Diff fresh vs baseline headline metrics; returns #regressions.
+
+    Only suites present in *both* dumps are compared, and only the
+    dotted paths their module's ``HEADLINES`` declares.  A ``"higher"``
+    headline regresses when fresh < baseline * (1 - tolerance); a
+    ``"lower"`` one when fresh > baseline * (1 + tolerance).
+    """
+    by_name = {mod.__name__.rsplit(".", 1)[-1]: mod for _, mod in SUITES}
+    regressions = 0
+    for modname, base_metrics in sorted(baseline.items()):
+        mod = by_name.get(modname)
+        headlines = getattr(mod, "HEADLINES", None) if mod else None
+        if not headlines or modname not in fresh:
+            continue
+        for dotted, direction in sorted(headlines.items()):
+            b = _resolve(base_metrics, dotted)
+            f = _resolve(fresh[modname], dotted)
+            if b is None or f is None:
+                print(f"# compare {modname}.{dotted}: missing "
+                      f"(baseline={b}, fresh={f}) — skipped", flush=True)
+                continue
+            if direction == "higher":
+                bad = f < b * (1 - tolerance)
+            else:
+                bad = f > b * (1 + tolerance)
+            tag = "REGRESSION" if bad else "ok"
+            print(f"# compare {modname}.{dotted}: baseline={b:.4g} "
+                  f"fresh={f:.4g} ({direction} is better) {tag}",
+                  flush=True)
+            regressions += bad
+    return regressions
 
 
 def main() -> None:
@@ -41,13 +95,24 @@ def main() -> None:
     ap.add_argument("--only")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="dump each suite's headline metrics to OUT")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="diff fresh metrics against a committed "
+                         "BENCH_<name>.json; exit 1 on >20%% headline "
+                         "regression")
     args = ap.parse_args()
+    baseline = None
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
     print("name,us_per_call,derived")
     failures = 0
     metrics: dict = {}
     for title, mod in SUITES:
         if args.only and args.only not in mod.__name__:
             continue
+        if baseline is not None and not args.only \
+                and mod.__name__.rsplit(".", 1)[-1] not in baseline:
+            continue            # compare runs only re-measure the baseline
         print(f"# --- {title} ---", flush=True)
         try:
             out = mod.run(quick=args.quick)
@@ -70,6 +135,8 @@ def main() -> None:
             with open(path, "w") as f:
                 json.dump({modname: out}, f, indent=2, sort_keys=True)
             print(f"# wrote {path}", flush=True)
+    if baseline is not None:
+        failures += compare_metrics(metrics, baseline)
     if failures:
         sys.exit(1)
 

@@ -16,3 +16,4 @@ python -m benchmarks.run --quick --only serving
 python -m benchmarks.run --quick --only fill   # packed/strip parity gate
 python -m benchmarks.run --quick --only pairhmm  # forward-oracle parity gate
 python -m benchmarks.run --quick --only filter   # myers bit-exactness gate
+python -m benchmarks.run --quick --only autotune # table round-trip + parity gate

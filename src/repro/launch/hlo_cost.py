@@ -10,6 +10,12 @@ condition's compare constant).
 
 Reported per device (the module is the post-GSPMD partitioned program):
   * flops      — 2*prod(out)*contract for every dot (+ fusion-internal dots)
+  * ewise_flops — one op per output element of every elementwise
+                 arithmetic/compare/select instruction (fusion bodies
+                 included), scaled by loop trip counts.  DP matrix fills
+                 are elementwise-dominated — no dots — so this, not
+                 ``flops``, is the compute term the plan autotuner's cost
+                 model ranks schedule candidates by
   * bytes      — sum of operand+output bytes of materializing instructions
                  (fusion = its boundary, not its body) — the standard
                  post-fusion HBM-traffic approximation
@@ -35,11 +41,30 @@ _DTYPE_BYTES = {
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+# Two HLO text dialects share this parser: *compiled* dumps
+# (``compiled.as_text()``: ``%name = ...``, headers carry a
+# ``(params) -> result`` signature) and *lowered* un-compiled dumps
+# (``lowered.compiler_ir('hlo').as_hlo_text()``: bare names, headers are
+# just ``name {``).  The ``%`` sigil is optional everywhere and operand /
+# called-computation references resolve either way.
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _COMMENT_RE = re.compile(r"/\*.*?\*/")
-_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
 _OPCODE_RE = re.compile(r"([a-z][\w\-]*)\(")
-_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_COMP_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\)\s*->.*)?\{\s*$")
+_REF_RE = re.compile(r"%?([A-Za-z_][\w\.\-]*)")
+
+
+def _refs(s: str) -> List[str]:
+    """Instruction-name references in an operand/attr region — compiled
+    dumps mark them ``%name``; lowered dumps use bare names (filter out
+    dtype tokens so a stray shape annotation can't read as an operand)."""
+    names = re.findall(r"%([\w\.\-]+)", s)
+    if names:
+        return names
+    return [n for n in _REF_RE.findall(s)
+            if n not in _DTYPE_BYTES and n not in ("true", "false")]
 
 
 def _parse_instr(line: str):
@@ -91,16 +116,19 @@ class Cost:
     bytes: float = 0.0
     collectives: List[Tuple[str, float, int, float]] = dataclasses.field(
         default_factory=list)
+    ewise_flops: float = 0.0
 
     def __iadd__(self, other):
         self.flops += other.flops
         self.bytes += other.bytes
         self.collectives.extend(other.collectives)
+        self.ewise_flops += other.ewise_flops
         return self
 
     def scaled(self, k: float) -> "Cost":
         return Cost(self.flops * k, self.bytes * k,
-                    [(o, b, g, t * k) for (o, b, g, t) in self.collectives])
+                    [(o, b, g, t * k) for (o, b, g, t) in self.collectives],
+                    self.ewise_flops * k)
 
     @property
     def collective_bytes(self) -> float:
@@ -141,7 +169,7 @@ def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
     out_elems = 1
     for d in _shape_dims(instr.shape):
         out_elems *= d
-    ops = re.findall(r"%([\w\.\-]+)", instr.rest.split(")")[0])
+    ops = _refs(instr.rest.split(")")[0])
     lhs_shape = shapes.get(ops[0], "") if ops else ""
     lhs_dims = _shape_dims(lhs_shape)
     contract = 1
@@ -184,6 +212,27 @@ _SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
                "partition-id", "replica-id", "custom-call", "domain",
                "opt-barrier", "convert", "copy-start", "copy-done"}
 
+# elementwise arithmetic/logic ops: one "flop" per output element.  The
+# DP fills this framework autotunes are max/add/select recurrences — no
+# dots — so these are their compute cost.  Bit ops count too (the Myers
+# engine's entire recurrence is and/or/xor/shift on packed words).
+_EWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "remainder", "power",
+    "maximum", "minimum", "compare", "select", "clamp", "negate", "abs",
+    "sign", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "sqrt", "rsqrt", "cbrt", "tanh", "logistic", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "and", "or", "xor", "not",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "popcnt", "count-leading-zeros",
+}
+
+
+def _ewise_elems(instr: Instr) -> int:
+    n = 1
+    for d in _shape_dims(instr.shape):
+        n *= d
+    return n
+
 
 def breakdown(text: str, n_devices: int = 1, top: int = 12):
     """Hillclimb tooling: attribute cost to the entry's top-level loops.
@@ -195,8 +244,8 @@ def breakdown(text: str, n_devices: int = 1, top: int = 12):
     rows = []
     for instr in comps["__entry__"]:
         if instr.op == "while":
-            mb = re.search(r"body=%([\w\.\-]+)", instr.rest)
-            mc = re.search(r"condition=%([\w\.\-]+)", instr.rest)
+            mb = re.search(r"body=%?([\w\.\-]+)", instr.rest)
+            mc = re.search(r"condition=%?([\w\.\-]+)", instr.rest)
             trips = _trip_count(instr, comps, mc.group(1) if mc else None)
             sub = analyze_computation(text, mb.group(1), n_devices)
             meta = re.search(r'op_name="([^"]*)"', instr.rest)
@@ -219,6 +268,23 @@ def analyze(text: str, n_devices: int = 1) -> Cost:
     return _analyze_comps(parse_computations(text), n_devices)
 
 
+def analyze_plan(spec, params, engine_name: str,
+                 q_shape: tuple, r_shape: tuple, *,
+                 batch_size: Optional[int] = None,
+                 with_traceback: bool = True, mode: str = "align",
+                 n_devices: int = 1, **options) -> Cost:
+    """Per-plan entry point: cost of exactly the program the runtime
+    plan cache would compile for these arguments, from its *lowered*
+    (un-compiled) HLO — the autotuner's pre-timing estimate.  ``options``
+    are engine schedule knobs (``strip=``, ``tb_pack=``, ...)."""
+    from repro.runtime import plan as plan_mod   # lazy: no import cycle
+    text = plan_mod.lower_plan_hlo(
+        spec, params, engine_name, q_shape, r_shape,
+        batch_size=batch_size, with_traceback=with_traceback, mode=mode,
+        **options)
+    return analyze(text, n_devices)
+
+
 def _analyze_comps(comps: Dict[str, List[Instr]], n_devices: int) -> Cost:
     memo: Dict[str, Cost] = {}
 
@@ -235,21 +301,23 @@ def _analyze_comps(comps: Dict[str, List[Instr]], n_devices: int) -> Cost:
                 total.flops += _dot_flops(instr, shapes)
                 total.bytes += _io_bytes(instr, shapes)
             elif op == "fusion":
-                m = re.search(r"calls=%([\w\.\-]+)", instr.rest)
+                m = re.search(r"calls=%?([\w\.\-]+)", instr.rest)
                 if m:                      # fused dots still count as flops
-                    total.flops += comp_cost(m.group(1)).flops
+                    sub = comp_cost(m.group(1))
+                    total.flops += sub.flops
+                    total.ewise_flops += sub.ewise_flops
                 total.bytes += _fusion_bytes(instr, shapes,
                                              m.group(1) if m else None)
             elif op == "while":
-                mb = re.search(r"body=%([\w\.\-]+)", instr.rest)
-                mc = re.search(r"condition=%([\w\.\-]+)", instr.rest)
+                mb = re.search(r"body=%?([\w\.\-]+)", instr.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", instr.rest)
                 trips = _trip_count(instr, comps,
                                     mc.group(1) if mc else None)
                 if mb:
                     total += comp_cost(mb.group(1)).scaled(trips)
             elif op in ("call", "conditional", "async-start"):
                 for m in re.finditer(
-                        r"(?:to_apply|calls|called_computation)=%([\w\.\-]+)",
+                        r"(?:to_apply|calls|called_computation)=%?([\w\.\-]+)",
                         instr.rest):
                     total += comp_cost(m.group(1))
                 total.bytes += _io_bytes(instr, shapes)
@@ -262,7 +330,7 @@ def _analyze_comps(comps: Dict[str, List[Instr]], n_devices: int) -> Cost:
                 # XLA:CPU float-normalization legalizes bf16 collectives to
                 # f32 with convert fusions around them; the TPU lowering
                 # keeps bf16 on the wire -> halve such payloads (§Perf D1).
-                ops_n = re.findall(r"%([\w\.\-]+)", instr.rest.split("),")[0])
+                ops_n = _refs(instr.rest.split("),")[0])
                 prod = producers.get(ops_n[0]) if ops_n else None
                 if prod is not None and (
                         prod.op == "convert" or
@@ -276,12 +344,14 @@ def _analyze_comps(comps: Dict[str, List[Instr]], n_devices: int) -> Cost:
                 if op == "custom-call":
                     total.bytes += _io_bytes(instr, shapes)
             else:
+                if op in _EWISE_OPS:
+                    total.ewise_flops += _ewise_elems(instr)
                 total.bytes += _io_bytes(instr, shapes)
         memo[name] = total
         return total
 
     def _operand_bytes(instr: Instr, shapes) -> int:
-        ops = re.findall(r"%([\w\.\-]+)", instr.rest.split("),")[0])
+        ops = _refs(instr.rest.split("),")[0])
         return sum(_shape_bytes(shapes.get(o, "")) for o in ops)
 
     def _io_bytes(instr: Instr, shapes) -> int:
@@ -291,7 +361,7 @@ def _analyze_comps(comps: Dict[str, List[Instr]], n_devices: int) -> Cost:
         if instr.op in ("dynamic-slice", "slice", "gather"):
             return 2 * out_b
         if instr.op in ("dynamic-update-slice", "scatter"):
-            ops = re.findall(r"%([\w\.\-]+)", instr.rest.split("),")[0])
+            ops = _refs(instr.rest.split("),")[0])
             upd = (_shape_bytes(shapes.get(ops[1], ""))
                    if len(ops) > 1 else out_b)
             return 2 * upd
@@ -307,7 +377,7 @@ def _analyze_comps(comps: Dict[str, List[Instr]], n_devices: int) -> Cost:
         decisive inside trip-counted loops like the attention block scan).
         """
         out_b = _shape_bytes(instr.shape)
-        ops = re.findall(r"%([\w\.\-]+)", instr.rest.split("),")[0])
+        ops = _refs(instr.rest.split("),")[0])
         if not called or called not in comps:
             return out_b + sum(_shape_bytes(shapes.get(o, "")) for o in ops)
         body = comps[called]
@@ -324,8 +394,8 @@ def _analyze_comps(comps: Dict[str, List[Instr]], n_devices: int) -> Cost:
                 total_b += full
                 continue
             consumers = [bi for bi in body
-                         if re.search(r"%" + re.escape(pname) + r"\b",
-                                      bi.rest)]
+                         if re.search(r"(?<![\w.\-])%?" + re.escape(pname)
+                                      + r"(?![\w.\-])", bi.rest)]
             if consumers and all(c.op in _SLICERS for c in consumers):
                 total_b += sum(_shape_bytes(c.shape) for c in consumers)
             else:

@@ -26,6 +26,17 @@ PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 LINK_BW = 50e9               # bytes/s / link (ICI)
 
+# Coarse per-backend (peak elementwise flops/s, memory bandwidth) pairs
+# for the plan autotuner's pre-timing ranking.  Absolute numbers are
+# deliberately rough — candidates at one sweep point share kernel,
+# bucket and batch, so only the *relative* compute/memory balance
+# matters for pruning; winners are still picked by measurement.
+BACKEND_PEAKS = {
+    "tpu": (PEAK_FLOPS, HBM_BW),
+    "gpu": (60e12, 2000e9),
+    "cpu": (100e9, 30e9),
+}
+
 _WIRE = {"all-gather": lambda g: (g - 1) / g,
          "reduce-scatter": lambda g: (g - 1) / g,
          "all-reduce": lambda g: 2 * (g - 1) / g,
@@ -137,6 +148,51 @@ def attn_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
     if shape.kind == "train":
         fl *= 3                          # fwd + bwd(2x)
     return fl
+
+
+@dataclasses.dataclass
+class PlanRoofline:
+    """Two-term roofline for one compiled-plan candidate (single host,
+    no collectives): predicted seconds and predicted cells/sec — the
+    quantity the autotuner ranks schedule candidates by before timing."""
+    compute_s: float
+    memory_s: float
+    cells: float
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s)
+
+    @property
+    def cells_per_s(self) -> float:
+        return self.cells / max(self.bound_s, 1e-12)
+
+    @property
+    def dominant(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+
+def plan_roofline(cost, cells: float, *, backend: str = None,
+                  trips: float = 1.0) -> PlanRoofline:
+    """Roofline terms for one plan candidate from a ``hlo_cost.Cost``.
+
+    ``cost`` usually comes from :func:`hlo_cost.analyze_plan` over
+    *lowered* (un-compiled) HLO, where while-loop trip counts are not
+    yet annotated — the caller passes the analytic ``trips`` of the
+    dominant fill loop (e.g. ``ceil((Q + R) / strip)`` wavefront steps)
+    and both terms scale by it.  Elementwise flops dominate DP fills
+    (there are no dots), so the compute term uses ``flops +
+    ewise_flops``.
+    """
+    import jax
+
+    if backend is None:
+        backend = jax.default_backend()
+    peak, bw = BACKEND_PEAKS.get(backend, BACKEND_PEAKS["cpu"])
+    return PlanRoofline(
+        compute_s=(cost.flops + cost.ewise_flops) * trips / peak,
+        memory_s=cost.bytes * trips / bw,
+        cells=cells)
 
 
 @dataclasses.dataclass

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import alphabets
 from repro.runtime import bucketing
+from repro.runtime import plan as plan_mod
 
 from . import chain as chain_mod
 from . import extend as extend_mod
@@ -88,8 +89,10 @@ class ReadMapper:
         self.filter_engine = filter_engine
         # the screen batches wider than extension: it is score-only (no
         # traceback memory) and the bit-parallel engine pays per-dispatch
-        # overhead, not per-cell
-        self.screen_block = screen_block
+        # overhead, not per-cell.  Power-of-two so screen batches land on
+        # the same plan-cache block grid as everything else.
+        self.screen_block = plan_mod.validate_pow2_option(
+            "screen_block", screen_block)
         # reads pad to at least one full minimizer window
         self._read_min_bucket = bucketing.bucket_length(k + w)
         self._seed_chain = jax.jit(functools.partial(

@@ -8,19 +8,22 @@ through one bucketing policy — instead of five independent jit call sites
 and a global max_len pad.
 """
 from .registry import (Engine, available_engines, engine_options,
-                       get_engine, register_engine)
+                       engine_tunable, get_engine, register_engine)
 from .plan import (CompiledPlan, align_impl, clear_plan_cache, get_plan,
-                   plan_cache_info, traceback_bytes)
+                   lower_plan_hlo, plan_cache_info, resolve_engine_options,
+                   traceback_bytes, validate_int_option,
+                   validate_pow2_option)
 from .bucketing import (Bucket, bucket_length, bucket_shape,
                         inverse_permutation, max_grid_bucket,
                         pack_by_bucket, pad_to_bucket)
 from .dispatch import run_pairs, run_pipelined
 
 __all__ = [
-    "Engine", "available_engines", "engine_options", "get_engine",
-    "register_engine",
+    "Engine", "available_engines", "engine_options", "engine_tunable",
+    "get_engine", "register_engine",
     "CompiledPlan", "align_impl", "clear_plan_cache", "get_plan",
-    "plan_cache_info", "traceback_bytes",
+    "lower_plan_hlo", "plan_cache_info", "resolve_engine_options",
+    "traceback_bytes", "validate_int_option", "validate_pow2_option",
     "Bucket", "bucket_length", "bucket_shape", "inverse_permutation",
     "max_grid_bucket", "pack_by_bucket", "pad_to_bucket",
     "run_pairs", "run_pipelined",

@@ -17,6 +17,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.core.types as T
 import repro.core.traceback as tb_mod
@@ -68,6 +69,61 @@ class PlanKey:
     xdrop: Optional[int] = None      # X-drop early termination; None = off
 
 
+def _build_fn(key: PlanKey, spec: T.DPKernelSpec,
+              engine_name: str) -> Callable:
+    """The pure python callable a plan jits: engine options applied,
+    single vs batched dispatch resolved.  Shared by :class:`CompiledPlan`
+    and :func:`lower_plan_hlo` so the cost model analyzes exactly the
+    program the cache would compile."""
+    engine_fn = registry.get_engine(engine_name)
+    eng_opts = registry.engine_options(engine_name)
+    # forward the plan's resolved schedule knobs (strip, tb_pack) to
+    # engines that declare them; PlanKey fields are named after them.
+    # 'dynamic'-valued options are runtime arguments, not cache knobs.
+    opts = {name: getattr(key, name) for name, v in eng_opts.items()
+            if v != "dynamic"}
+    if opts:
+        engine_fn = functools.partial(engine_fn, **opts)
+    supports_bound = eng_opts.get("live_bound") == "dynamic"
+    mode = key.mode
+    wtb = key.with_traceback
+
+    def single(params, query, ref, q_len, r_len):
+        if mode == "fill":
+            return fill_impl(spec, engine_fn, params, query, ref,
+                             q_len, r_len)
+        return align_impl(spec, engine_fn, params, query, ref,
+                          q_len, r_len, with_traceback=wtb)
+
+    if key.batch_size is None:
+        return single
+
+    # Batched: one shared fill bound (max over the block, passed
+    # through vmap unbatched so the engine's early-exit loop
+    # keeps a scalar counter), then — for traceback plans — one
+    # batched walk over an active mask that terminates when
+    # every row has hit its END pointer, instead of vmapping a
+    # worst-case per-row while_loop.
+    max_len = key.bucket_shape[0][0] + key.bucket_shape[1][0] + 1
+
+    def eng(params, query, ref, q_len, r_len, bound):
+        kw = {"live_bound": bound} if supports_bound else {}
+        return engine_fn(spec, params, query, ref, q_len, r_len, **kw)
+
+    def fn(params, queries, refs, q_lens, r_lens):
+        bound = jnp.max(q_lens + r_lens)
+        res = jax.vmap(eng, in_axes=(None, 0, 0, 0, 0, None))(
+            params, queries, refs, q_lens, r_lens, bound)
+        if mode == "fill":
+            return res
+        if wtb:
+            return tb_mod.run_batched(spec, res, max_len=max_len)
+        return T.Alignment(score=res.score, end_i=res.end_i,
+                           end_j=res.end_j)
+
+    return fn
+
+
 class CompiledPlan:
     """A jitted alignment executable for one fixed input shape.
 
@@ -85,52 +141,7 @@ class CompiledPlan:
         self.calls = 0
         self.hits = 0          # cache hits after the initial miss
         self.compile_s = None  # trace+compile wall time of the first call
-        engine_fn = registry.get_engine(engine_name)
-        eng_opts = registry.engine_options(engine_name)
-        # forward the plan's resolved schedule knobs (strip, tb_pack) to
-        # engines that declare them; PlanKey fields are named after them.
-        # 'dynamic'-valued options are runtime arguments, not cache knobs.
-        opts = {name: getattr(key, name) for name, v in eng_opts.items()
-                if v != "dynamic"}
-        if opts:
-            engine_fn = functools.partial(engine_fn, **opts)
-        supports_bound = eng_opts.get("live_bound") == "dynamic"
-        mode = key.mode
-        wtb = key.with_traceback
-
-        def single(params, query, ref, q_len, r_len):
-            if mode == "fill":
-                return fill_impl(spec, engine_fn, params, query, ref,
-                                 q_len, r_len)
-            return align_impl(spec, engine_fn, params, query, ref,
-                              q_len, r_len, with_traceback=wtb)
-
-        if key.batch_size is None:
-            fn = single
-        else:
-            # Batched: one shared fill bound (max over the block, passed
-            # through vmap unbatched so the engine's early-exit loop
-            # keeps a scalar counter), then — for traceback plans — one
-            # batched walk over an active mask that terminates when
-            # every row has hit its END pointer, instead of vmapping a
-            # worst-case per-row while_loop.
-            max_len = key.bucket_shape[0][0] + key.bucket_shape[1][0] + 1
-
-            def eng(params, query, ref, q_len, r_len, bound):
-                kw = {"live_bound": bound} if supports_bound else {}
-                return engine_fn(spec, params, query, ref, q_len, r_len,
-                                 **kw)
-
-            def fn(params, queries, refs, q_lens, r_lens):
-                bound = jnp.max(q_lens + r_lens)
-                res = jax.vmap(eng, in_axes=(None, 0, 0, 0, 0, None))(
-                    params, queries, refs, q_lens, r_lens, bound)
-                if mode == "fill":
-                    return res
-                if wtb:
-                    return tb_mod.run_batched(spec, res, max_len=max_len)
-                return T.Alignment(score=res.score, end_i=res.end_i,
-                                   end_j=res.end_j)
+        fn = _build_fn(key, spec, engine_name)
 
         # Buffer donation is only safe when the caller hands over freshly
         # padded copies (the bucketed batch paths do); XLA:CPU does not
@@ -207,6 +218,36 @@ def _placement(mesh, mesh_axis: str) -> Optional[str]:
 _NEUTRAL_OPTS = {"strip": 1, "tb_pack": 1, "xdrop": None}
 
 
+def validate_int_option(name: str, value, *,
+                        minimum: Optional[int] = None) -> int:
+    """Validate a numeric option value, naming the offending option.
+
+    Rejects non-integers (including bools and non-integral floats —
+    ``int()`` would silently truncate ``strip=2.5`` to 2) so bad values
+    fail at plan-key construction instead of surfacing as shape errors
+    inside the fill.
+    """
+    if isinstance(value, bool) or not isinstance(value, (int, np.integer)):
+        raise ValueError(
+            f"option {name!r} must be an integer, got {value!r} "
+            f"({type(value).__name__})")
+    value = int(value)
+    if minimum is not None and value < minimum:
+        raise ValueError(
+            f"option {name!r} must be >= {minimum}, got {value}")
+    return value
+
+
+def validate_pow2_option(name: str, value) -> int:
+    """An integer option that must also be a power of two (block/bucket
+    shaped knobs, e.g. the mapper's ``screen_block``)."""
+    v = validate_int_option(name, value, minimum=1)
+    if v & (v - 1):
+        raise ValueError(
+            f"option {name!r} must be a power of two, got {v}")
+    return v
+
+
 def resolve_engine_options(spec: T.DPKernelSpec, engine_name: str,
                            requested: Optional[dict] = None) -> dict:
     """Resolve every schedule knob an engine declares against a request.
@@ -239,9 +280,7 @@ def resolve_engine_options(spec: T.DPKernelSpec, engine_name: str,
                 if isinstance(strip, dict):
                     strip = strip.get(jax.default_backend(),
                                       strip["default"])
-            out["strip"] = int(strip)
-            if out["strip"] < 1:
-                raise ValueError(f"strip must be >= 1, got {out['strip']}")
+            out["strip"] = validate_int_option("strip", strip, minimum=1)
         elif name == "tb_pack":
             if spec.traceback is None:
                 out["tb_pack"] = 1
@@ -250,13 +289,13 @@ def resolve_engine_options(spec: T.DPKernelSpec, engine_name: str,
             tb_pack = req.get("tb_pack")
             if tb_pack is None and default is not None:
                 tb_pack = default
+            if tb_pack is not None:
+                tb_pack = validate_int_option("tb_pack", tb_pack)
             out["tb_pack"] = resolve_tb_pack(spec, tb_pack)  # one validator
         elif name == "xdrop":
             xdrop = req.get("xdrop", default)
             if xdrop is not None:
-                xdrop = int(xdrop)
-                if xdrop < 0:
-                    raise ValueError(f"xdrop must be >= 0, got {xdrop}")
+                xdrop = validate_int_option("xdrop", xdrop, minimum=0)
             out["xdrop"] = xdrop
         else:
             out[name] = req.get(name, default)
@@ -271,6 +310,63 @@ def resolve_engine_opts(spec: T.DPKernelSpec, engine_name: str,
     r = resolve_engine_options(spec, engine_name,
                                {"strip": strip, "tb_pack": tb_pack})
     return r["strip"], r["tb_pack"]
+
+
+def _tuned_defaults(kernel: str, engine_name: str, bucket: tuple,
+                    batch_size: Optional[int]) -> Optional[dict]:
+    """Winning schedule options from the persisted autotuning table,
+    consulted only when the caller passed no explicit option.  Any table
+    problem (missing, corrupt, stale schema) falls back to the
+    hand-picked defaults — a bad table must never break dispatch.  Only
+    options the engine actually declares are forwarded, so a table
+    written against a richer engine cannot poison resolution."""
+    try:
+        from repro.tune import table as tune_table
+        tuned = tune_table.lookup(kernel, engine_name, bucket, batch_size)
+    except Exception:
+        return None
+    if not tuned:
+        return None
+    sup = registry.engine_options(engine_name)
+    return {k: v for k, v in tuned.items()
+            if v is not None and sup.get(k, "dynamic") != "dynamic"}
+
+
+def lower_plan_hlo(spec: T.DPKernelSpec, params, engine_name: str,
+                   q_shape: tuple, r_shape: tuple, *,
+                   batch_size: Optional[int] = None,
+                   with_traceback: bool = True, mode: str = "align",
+                   strip: Optional[int] = None,
+                   tb_pack: Optional[int] = None,
+                   xdrop: Optional[int] = None) -> str:
+    """Unoptimized HLO text of exactly the program :func:`get_plan`
+    would compile for these arguments — lowered (traced) but *not*
+    XLA-compiled, so the autotuner's cost model can rank schedule
+    candidates without paying a compile per candidate.
+    """
+    wtb = bool(with_traceback and spec.traceback is not None)
+    opts = resolve_engine_options(
+        spec, engine_name,
+        {"strip": strip, "tb_pack": tb_pack, "xdrop": xdrop})
+    key = PlanKey(kernel=spec.name, engine=engine_name,
+                  bucket_shape=(tuple(q_shape), tuple(r_shape)),
+                  batch_size=batch_size, with_traceback=wtb, mode=mode,
+                  strip=opts["strip"], tb_pack=opts["tb_pack"],
+                  semiring=spec.semiring.name, xdrop=opts["xdrop"])
+    fn = _build_fn(key, spec, engine_name)
+    cdt = jnp.dtype(spec.char_dtype)
+    if batch_size is None:
+        q = jax.ShapeDtypeStruct(tuple(q_shape), cdt)
+        r = jax.ShapeDtypeStruct(tuple(r_shape), cdt)
+        ql = jax.ShapeDtypeStruct((), jnp.int32)
+        rl = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        q = jax.ShapeDtypeStruct((batch_size,) + tuple(q_shape), cdt)
+        r = jax.ShapeDtypeStruct((batch_size,) + tuple(r_shape), cdt)
+        ql = jax.ShapeDtypeStruct((batch_size,), jnp.int32)
+        rl = jax.ShapeDtypeStruct((batch_size,), jnp.int32)
+    lowered = jax.jit(fn).lower(params, q, r, ql, rl)
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
 
 
 # lane-strip height of the Pallas kernel's ('chunk', n_pe) tb layout;
@@ -328,11 +424,22 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
     (strip-mined, packed, no X-drop).  Passing a non-``None`` value for
     an option the engine does not declare raises, listing the valid
     choices.
+
+    When *no* explicit option is passed, the persisted autotuning table
+    (``repro.tune.table``, env ``REPRO_TUNE_TABLE``) is consulted first:
+    a committed sweep's winning schedule for this (kernel, engine,
+    bucket, batch, backend) replaces the hand-picked defaults.  Explicit
+    options always win, and ``REPRO_TUNE_TABLE=off`` restores the
+    hand-picked defaults exactly.
     """
     wtb = bool(with_traceback and spec.traceback is not None)
-    opts = resolve_engine_options(
-        spec, engine_name,
-        {"strip": strip, "tb_pack": tb_pack, "xdrop": xdrop})
+    requested = {"strip": strip, "tb_pack": tb_pack, "xdrop": xdrop}
+    if all(v is None for v in requested.values()):
+        tuned = _tuned_defaults(spec.name, engine_name,
+                                (q_shape[0], r_shape[0]), batch_size)
+        if tuned:
+            requested.update(tuned)
+    opts = resolve_engine_options(spec, engine_name, requested)
     strip_r, pack_r, xdrop_r = opts["strip"], opts["tb_pack"], opts["xdrop"]
     if jax.default_backend() == "cpu":
         donate = False   # donation is a no-op on CPU; don't split the cache
@@ -365,19 +472,58 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
     return plan
 
 
+# measurement history of plans retired by clear_plan_cache(keep_stats=
+# True): autotune sweeps clear compiled executables between configs
+# without losing the session's compile-time/call accounting
+_RETIRED = {"plans": 0, "calls": 0, "hits": 0,
+            "compiled": 0, "compile_s": 0.0}
+
+
+def _totals() -> dict[str, Any]:
+    t = dict(_RETIRED)
+    t["plans"] += len(_CACHE)
+    for p in _CACHE.values():
+        t["calls"] += p.calls
+        t["hits"] += p.hits
+        if p.compile_s is not None:
+            t["compiled"] += 1
+            t["compile_s"] += p.compile_s
+    return t
+
+
 def plan_cache_info() -> dict[str, Any]:
     """Cache-wide totals plus per-plan observability: each entry of
     ``plans`` carries the PlanKey, its cache ``hits`` (after the initial
-    miss), dispatch ``calls``, and first-call ``compile_s``."""
+    miss), dispatch ``calls``, and first-call ``compile_s``.
+
+    ``totals`` rolls calls/hits/compile counts and compile seconds up
+    across live plans *and* plans retired by
+    ``clear_plan_cache(keep_stats=True)`` — the session-wide measurement
+    history an autotune sweep or a warm-boot report reads."""
     plans = [{"key": p.key, "hits": p.hits, "calls": p.calls,
               "compile_s": p.compile_s} for p in _CACHE.values()]
     return {"size": len(_CACHE), "hits": _STATS["hits"],
             "misses": _STATS["misses"],
             "keys": [p.key for p in _CACHE.values()],
-            "plans": plans}
+            "plans": plans, "totals": _totals()}
 
 
-def clear_plan_cache() -> None:
+def clear_plan_cache(keep_stats: bool = False) -> None:
+    """Drop every compiled plan.  ``keep_stats=True`` rolls the retired
+    plans' hit/call/compile_s counters into ``plan_cache_info()
+    ['totals']`` (and keeps the cache-wide hit/miss counters) so a sweep
+    can clear executables without losing measurement history."""
     with _LOCK:
+        if keep_stats:
+            for p in _CACHE.values():
+                _RETIRED["plans"] += 1
+                _RETIRED["calls"] += p.calls
+                _RETIRED["hits"] += p.hits
+                if p.compile_s is not None:
+                    _RETIRED["compiled"] += 1
+                    _RETIRED["compile_s"] += p.compile_s
+        else:
+            _STATS["hits"] = _STATS["misses"] = 0
+            _RETIRED.update(plans=0, calls=0, hits=0,
+                            compiled=0, compile_s=0.0)
         _CACHE.clear()
-        _STATS["hits"] = _STATS["misses"] = 0

@@ -28,6 +28,10 @@ class _Entry:
     loader: Optional[Callable] = None    # deferred constructor
     doc: str = ""
     options: Mapping[str, object] = dataclasses.field(default_factory=dict)
+    # option name -> tuple of candidate values the autotuner may sweep.
+    # Only *result-preserving* knobs belong here (schedule choices like
+    # strip / tb_pack); knobs that change outputs (xdrop) never do.
+    tunable: Mapping[str, tuple] = dataclasses.field(default_factory=dict)
 
 
 _REGISTRY: dict[str, _Entry] = {}
@@ -37,6 +41,7 @@ _LOCK = threading.Lock()
 def register_engine(name: str, fn: Optional[Callable] = None, *,
                     loader: Optional[Callable] = None, doc: str = "",
                     options: Optional[Mapping[str, object]] = None,
+                    tunable: Optional[Mapping[str, tuple]] = None,
                     overwrite: bool = False) -> None:
     """Register engine ``name`` either eagerly (``fn``) or deferred
     (``loader() -> fn``, imported/built on first :func:`get_engine`).
@@ -47,14 +52,31 @@ def register_engine(name: str, fn: Optional[Callable] = None, *,
     compiled executables by the resolved values and forwards them to the
     engine — e.g. the wavefront engine's ``strip`` (anti-diagonals per
     scan step) and ``tb_pack`` (pointers per traceback byte).
+
+    ``tunable`` declares the *candidate grid* per option the design-space
+    autotuner (``repro.tune``) may legally sweep — a tuple of values, not
+    just the default.  Every tunable name must also appear in
+    ``options``, and only result-preserving schedule knobs may be
+    declared (the tuner asserts winners bit-identical to the default
+    plan, so an output-changing knob here would never survive anyway —
+    declaring it is an error caught at registration).
     """
     if (fn is None) == (loader is None):
         raise ValueError("pass exactly one of fn= or loader=")
+    tunable = dict(tunable or {})
+    opts = dict(options or {})
+    bad = sorted(set(tunable) - set(opts))
+    if bad:
+        raise ValueError(
+            f"engine {name!r}: tunable option(s) {bad} not declared in "
+            f"options={sorted(opts)}")
     with _LOCK:
         if name in _REGISTRY and not overwrite:
             raise ValueError(f"engine {name!r} already registered")
         _REGISTRY[name] = _Entry(name=name, fn=fn, loader=loader, doc=doc,
-                                 options=dict(options or {}))
+                                 options=opts,
+                                 tunable={k: tuple(v)
+                                          for k, v in tunable.items()})
 
 
 def get_engine(name: str) -> Callable:
@@ -84,6 +106,14 @@ def engine_options(name: str) -> dict[str, object]:
     (``None`` = derived from the kernel spec at plan time)."""
     entry = _REGISTRY.get(name)
     return dict(entry.options) if entry else {}
+
+
+def engine_tunable(name: str) -> dict[str, tuple]:
+    """Candidate-value grid per tunable option of engine ``name`` — the
+    legal design space ``repro.tune.space`` enumerates.  Engines with no
+    result-preserving schedule knobs return ``{}`` (nothing to tune)."""
+    entry = _REGISTRY.get(name)
+    return dict(entry.tunable) if entry else {}
 
 
 # ---------------------------------------------------------------------------
@@ -135,19 +165,24 @@ register_engine("wavefront", loader=_load_wavefront,
                 # strip: per-backend dict resolved at plan time.
                 # live_bound is a *dynamic* argument (shared batch fill
                 # bound), not a compile-time cache knob.  xdrop: X-drop
-                # early termination; None = run to completion.
+                # early termination; None = run to completion (xdrop is
+                # NOT tunable: it changes results).
                 options={"strip": STRIP_DEFAULTS,
                          "tb_pack": None, "live_bound": "dynamic",
-                         "xdrop": None})
+                         "xdrop": None},
+                tunable={"strip": (1, 2, 4, 8, 16),
+                         "tb_pack": (1, 2, 4, 8)})
 register_engine("banded", loader=_load_banded,
                 doc="O(n*W) band-packed lanes, score-only",
                 options={"xdrop": None})
 register_engine("pallas", loader=lambda: _load_pallas(False),
                 doc="Pallas TPU kernel of the wavefront schedule",
-                options={"tb_pack": None})
+                options={"tb_pack": None},
+                tunable={"tb_pack": (1, 2, 4, 8)})
 register_engine("pallas_interpret", loader=lambda: _load_pallas(True),
                 doc="Pallas kernel in interpreter mode (CPU-testable)",
-                options={"tb_pack": None})
+                options={"tb_pack": None},
+                tunable={"tb_pack": (1, 2, 4, 8)})
 register_engine("myers", loader=_load_myers,
                 doc="bit-parallel unit-cost edit distance (Myers 1999), "
                     "64/32 DP cells per word; kernels #16/#17 only")

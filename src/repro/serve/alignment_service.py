@@ -149,7 +149,8 @@ class AlignmentService:
                  max_pending: Optional[int] = None,
                  backpressure: str = "block",
                  prefilter: Optional[float] = None,
-                 prefilter_engine: str = "myers"):
+                 prefilter_engine: str = "myers",
+                 warm_start: Optional[Sequence] = None):
         if backpressure not in ("block", "raise"):
             raise ValueError(
                 f"backpressure must be 'block' or 'raise', got {backpressure!r}")
@@ -190,6 +191,55 @@ class AlignmentService:
         # per-batch shape telemetry, bounded so a long-lived service
         # doesn't accumulate host memory
         self.dispatches = collections.deque(maxlen=4096)
+        # AOT warm boot: pre-compile the declared channel grid so the
+        # first request at each (kernel, bucket) lands on a hot plan
+        if warm_start:
+            self.warm(warm_start)
+
+    def warm(self, entries: Sequence) -> int:
+        """Pre-compile plans for ``(kernel, bucket)`` (or ``(kernel,
+        bucket, block)``) channel entries; ``bucket`` may be one length
+        (square) or a ``(q, r)`` pair, snapped to the service's bucket
+        grid exactly as a request of those lengths would be.
+
+        Each entry warms the same plan ``_launch`` would resolve —
+        identical ``get_plan`` arguments, including donation and the
+        tuned-table default consultation — plus, on screenable channels,
+        the prefilter's score-only screen plan.  Sharded channels
+        (``mesh`` set) compile through ``core.batch`` lazily and are
+        skipped.  Returns the number of plans warmed.
+        """
+        from repro.tune import warm as warm_mod
+
+        n = 0
+        for entry in entries:
+            kernel, bucket = entry[0], entry[1]
+            block = entry[2] if len(entry) > 2 else None
+            if isinstance(bucket, int):
+                bucket = (bucket, bucket)
+            bucket = bucketing.bucket_shape(
+                bucket[0], bucket[1], min_bucket=self.min_bucket,
+                max_bucket=self.max_bucket)
+            spec, params, sharded_fn = self._channel(kernel)
+            if sharded_fn is not None:
+                continue
+            if block is None:
+                block = self.block_for(kernel, bucket)
+            char = spec.char_shape
+            q_shape, r_shape = (bucket[0],) + char, (bucket[1],) + char
+            if self._screenable(spec):
+                warm_mod.warm_plan(
+                    _PREFILTER_SPEC, edit_kernel.default_params(1),
+                    self.prefilter_engine, q_shape, r_shape,
+                    batch_size=block, with_traceback=False, mode="fill")
+                n += 1
+            warm_mod.warm_plan(
+                spec, params, self.engine_name, q_shape, r_shape,
+                batch_size=block,
+                with_traceback=self.with_traceback and
+                spec.traceback is not None, donate=True)
+            n += 1
+        return n
 
     def _bucket(self, req: AlignRequest) -> Tuple[int, int]:
         return bucketing.bucket_shape(

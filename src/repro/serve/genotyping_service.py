@@ -106,7 +106,8 @@ class GenotypingService:
                  min_bucket: int = bucketing.DEFAULT_MIN_BUCKET,
                  hap_norm: bool = True,
                  max_pending: Optional[int] = None,
-                 backpressure: str = "block"):
+                 backpressure: str = "block",
+                 warm_start: Optional[Sequence[Tuple[int, int]]] = None):
         if backpressure not in ("block", "raise"):
             raise ValueError(
                 f"backpressure must be 'block' or 'raise', got {backpressure!r}")
@@ -129,6 +130,25 @@ class GenotypingService:
         self.inflight: List[_InflightBlock] = []
         self._pending = 0            # incomplete sites
         self.dispatches = collections.deque(maxlen=4096)
+        if warm_start:
+            self.warm(warm_start)
+
+    def warm(self, entries: Sequence[Tuple[int, int]]) -> int:
+        """Pre-compile the forward plan for each ``(read_bucket,
+        hap_bucket)`` pair (snapped to the service's bucket grid) with
+        exactly the ``_launch`` arguments, so the first site at each
+        shape skips its trace+compile stall.  Returns #plans warmed."""
+        from repro.tune import warm as warm_mod
+
+        for rb, hb in entries:
+            bucket = bucketing.bucket_shape(
+                rb, hb, min_bucket=self.min_bucket,
+                max_bucket=self.max_bucket)
+            warm_mod.warm_plan(
+                self.spec, self.params, self.engine_name, (bucket[0],),
+                (bucket[1],), batch_size=self.block,
+                with_traceback=False, donate=True)
+        return len(entries)
 
     # -- intake ------------------------------------------------------------
     def submit(self, req: GenotypeRequest) -> GenotypeFuture:

@@ -42,12 +42,47 @@ class ReadMappingService:
 
     def __init__(self, ref, block: int = 16,
                  mapper: Optional[ReadMapper] = None,
-                 max_batch: Optional[int] = 256, **mapper_kw):
+                 max_batch: Optional[int] = 256,
+                 warm_start: Optional[List] = None, **mapper_kw):
         self.mapper = mapper if mapper is not None else ReadMapper(
             ref, block=block, **mapper_kw)
         self.max_batch = max_batch
         self.queue: List[MapRequest] = []
         self.dispatches = collections.deque(maxlen=4096)
+        if warm_start:
+            self.warm(warm_start)
+
+    def warm(self, entries: List) -> int:
+        """Pre-compile the extension plans for ``(read_bucket,
+        window_bucket, band)`` entries — the (spec, bucket) grid the
+        mapper's extension stage will hit, resolved through
+        ``extension_spec`` so the warmed spec object is the one
+        ``extend_jobs`` dispatches — plus, when the filter ladder is on,
+        the bit-parallel screen plan at the same bucket.  Buckets snap
+        to the power-of-two grid like ``run_pairs`` would snap them.
+        Returns #plans warmed."""
+        from repro.core.kernels_zoo import edit as edit_kernel
+        from repro.mapping import extend as extend_mod
+        from repro.runtime import bucketing
+        from repro.tune import warm as warm_mod
+
+        m = self.mapper
+        n = 0
+        for qb, rb, band in entries:
+            bucket = bucketing.bucket_shape(qb, rb)
+            spec, params = extend_mod.extension_spec(band, m.gap_mode)
+            warm_mod.warm_plan(
+                spec, params, m.engine_name, (bucket[0],), (bucket[1],),
+                batch_size=m.block, with_traceback=True, donate=True)
+            n += 1
+            if m.filter_mode == "myers":
+                warm_mod.warm_plan(
+                    extend_mod.SCREEN_SPEC, edit_kernel.default_params(1),
+                    m.filter_engine, (bucket[0],), (bucket[1],),
+                    batch_size=m.screen_block, with_traceback=False,
+                    donate=True)
+                n += 1
+        return n
 
     def submit(self, req: MapRequest):
         self.queue.append(req)

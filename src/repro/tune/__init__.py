@@ -1,0 +1,35 @@
+"""repro.tune — the plan autotuner (design-space search + persisted
+winners + warm boot).
+
+The paper's framework explores schedule parameters (PE count, strip
+factors, memory packing) per kernel configuration at synthesis time;
+this package is the software analogue over the runtime's result-
+preserving schedule knobs (``strip``, ``tb_pack``):
+
+* ``space``  — enumerate the legal option grid from the engine registry
+  (derived, never hand-listed);
+* ``cost``   — rank candidates by lowered-HLO roofline before any
+  compile, pruning the space to a top-K;
+* ``search`` — compile-and-time survivors through the real plan cache,
+  parity-gated against the hand-picked default;
+* ``table``  — persist winners in a versioned JSON keyed by (kernel,
+  engine, bucket, batch, backend, jax version); ``get_plan`` consults it
+  for defaults, ``REPRO_TUNE_TABLE=off`` kills it;
+* ``warm``   — pre-compile a service's channel grid at boot so the
+  first request lands hot.
+"""
+from .space import default_options, enumerate_space, tunable_names
+from .cost import fill_trips, point_cells, predict, rank
+from .search import assert_parity, make_batch, run_sweep, tune_point
+from .table import (ENV_VAR, SCHEMA_VERSION, TuningTable, active_table,
+                    default_path, entry_key, lookup, set_table)
+from .warm import warm_grid, warm_plan
+
+__all__ = [
+    "default_options", "enumerate_space", "tunable_names",
+    "fill_trips", "point_cells", "predict", "rank",
+    "assert_parity", "make_batch", "run_sweep", "tune_point",
+    "ENV_VAR", "SCHEMA_VERSION", "TuningTable", "active_table",
+    "default_path", "entry_key", "lookup", "set_table",
+    "warm_grid", "warm_plan",
+]

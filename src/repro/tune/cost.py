@@ -1,0 +1,90 @@
+"""Pre-timing candidate pruning via the lowered-HLO cost model.
+
+Compiling every design-space point just to time it is the expensive part
+of a sweep (XLA compiles of the big buckets dominate).  This module
+ranks candidates *before* any compile: ``launch.hlo_cost.analyze_plan``
+counts elementwise FLOPs and traffic bytes from the lowered (un-compiled)
+HLO of exactly the program ``get_plan`` would build, and
+``launch.roofline.plan_roofline`` turns the counts into predicted
+cells/sec.  Only the top-K predicted candidates (plus, always, the
+hand-picked default — the parity/ratio baseline must be measured) go on
+to compile-and-time.
+
+Lowered HLO carries no while-loop trip annotations (bounds are dynamic
+until XLA specializes them), so the dominant fill loop's trip count is
+supplied analytically: a strip-mined wavefront walks
+``ceil((Q + R) / strip)`` scan steps over the bucket.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.launch import hlo_cost, roofline
+
+
+def point_cells(bucket: tuple, batch_size: Optional[int]) -> float:
+    """DP cells one dispatch fills at this point (padded bucket area —
+    candidates share it, so it cancels in the ranking)."""
+    return float(bucket[0]) * float(bucket[1]) * float(batch_size or 1)
+
+
+def fill_trips(bucket: tuple, options: dict) -> float:
+    """Analytic scan-step count of the dominant fill loop."""
+    strip = int(options.get("strip") or 1)
+    return float(math.ceil((bucket[0] + bucket[1]) / max(strip, 1)))
+
+
+def predict(spec, params, engine_name: str, bucket: tuple,
+            batch_size: Optional[int], options: dict, *,
+            with_traceback: bool = True, mode: str = "align",
+            backend: Optional[str] = None) -> roofline.PlanRoofline:
+    """Roofline prediction for one candidate (no XLA compile)."""
+    char = spec.char_shape
+    cost = hlo_cost.analyze_plan(
+        spec, params, engine_name, (bucket[0],) + char,
+        (bucket[1],) + char, batch_size=batch_size,
+        with_traceback=with_traceback, mode=mode, **options)
+    return roofline.plan_roofline(
+        cost, point_cells(bucket, batch_size), backend=backend,
+        trips=fill_trips(bucket, options))
+
+
+def rank(spec, params, engine_name: str, bucket: tuple,
+         batch_size: Optional[int], candidates: list, *,
+         default: Optional[dict] = None, top_k: int = 4,
+         with_traceback: bool = True, mode: str = "align",
+         log=None) -> tuple[list, list]:
+    """Split candidates into (kept, pruned) by predicted cells/sec.
+
+    Each returned element is ``{"options", "predicted_cells_per_s"}``;
+    the default point is always kept (appended if prediction ranked it
+    out) and pruned points are logged via ``log`` so a sweep's coverage
+    cut is visible, never silent.  A candidate whose lowering fails
+    scores ``-inf`` — it would fail identically at compile time, so
+    pruning it loses nothing.
+    """
+    scored = []
+    for cand in candidates:
+        try:
+            pred = predict(spec, params, engine_name, bucket, batch_size,
+                           cand, with_traceback=with_traceback, mode=mode)
+            rate = pred.cells_per_s
+        except Exception:
+            rate = float("-inf")
+        scored.append({"options": dict(cand), "predicted_cells_per_s": rate})
+    scored.sort(key=lambda s: -s["predicted_cells_per_s"])
+    kept, pruned = scored[:max(top_k, 1)], scored[max(top_k, 1):]
+    if default is not None and \
+            not any(s["options"] == default for s in kept):
+        rescued = next((s for s in pruned if s["options"] == default), None)
+        if rescued is not None:
+            pruned.remove(rescued)
+        kept.append(rescued or
+                    {"options": dict(default),
+                     "predicted_cells_per_s": float("nan")})
+    if log is not None and pruned:
+        for s in pruned:
+            log(f"pruned {s['options']} "
+                f"(predicted {s['predicted_cells_per_s']:.3g} cells/s)")
+    return kept, pruned

@@ -1,0 +1,56 @@
+"""Legal schedule design space of one (kernel spec, engine) pair.
+
+The grid is *derived*, never hand-listed: engines declare their tunable
+option values at registration (``registry.engine_tunable``), and every
+cartesian-product point is pushed through the runtime's own
+``resolve_engine_options`` validator — a candidate the plan cache would
+reject (e.g. ``tb_pack=8`` on a 4-bit-pointer kernel) is silently
+dropped, and candidates that resolve to the same values collapse to one
+(a score-only kernel pins ``tb_pack=1``, so its whole tb_pack axis
+dedupes away).  The sweep therefore times exactly the set of schedules
+``get_plan`` could legally compile, no more and no less.
+"""
+from __future__ import annotations
+
+import itertools
+
+from repro.runtime import plan as plan_mod
+from repro.runtime import registry
+
+
+def tunable_names(engine_name: str) -> list[str]:
+    """Sorted tunable option names of an engine ([] = nothing to tune)."""
+    return sorted(registry.engine_tunable(engine_name))
+
+
+def default_options(spec, engine_name: str) -> dict:
+    """The hand-picked default point, restricted to the tunable axes —
+    what an empty request resolves to today (and the baseline every
+    sweep candidate must match bit-for-bit)."""
+    resolved = plan_mod.resolve_engine_options(spec, engine_name, {})
+    return {n: resolved[n] for n in tunable_names(engine_name)}
+
+
+def enumerate_space(spec, engine_name: str) -> list[dict]:
+    """Every legal, distinct tunable-option combination for this spec.
+
+    Candidates are validated through ``resolve_engine_options`` (illegal
+    points dropped) and deduplicated by their *resolved* values.  Returns
+    ``[]`` for engines with no tunable knobs.
+    """
+    grid = registry.engine_tunable(engine_name)
+    if not grid:
+        return []
+    names = sorted(grid)
+    seen: dict[tuple, dict] = {}
+    for combo in itertools.product(*(grid[n] for n in names)):
+        requested = dict(zip(names, combo))
+        try:
+            resolved = plan_mod.resolve_engine_options(
+                spec, engine_name, requested)
+        except ValueError:
+            continue                  # illegal at this spec; not an error
+        key = tuple(resolved[n] for n in names)
+        if key not in seen:
+            seen[key] = {n: resolved[n] for n in names}
+    return list(seen.values())

@@ -281,7 +281,7 @@ def test_option_validation_at_plan_construction():
     with pytest.raises(ValueError, match="does not accept"):
         plan_mod.get_plan(spec, "myers", (32,), (32,), batch_size=2,
                           with_traceback=False, mode="fill", strip=4)
-    with pytest.raises(ValueError, match="xdrop must be >= 0"):
+    with pytest.raises(ValueError, match=r"'xdrop' must be >= 0"):
         plan_mod.resolve_engine_options(spec, "wavefront", {"xdrop": -3})
 
 
