@@ -1,13 +1,20 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full test suite plus the bucketing benchmark.
-# One entry point for builders and CI; run from the repo root.
+# Tier-1 verification: the full test suite, the quick benchmark gates,
+# and the plan linter.  One entry point for builders and CI; run from
+# the repo root.
 #
 #   scripts/tier1.sh            # everything (slow model/serve suites too)
+#   scripts/tier1.sh --quick    # deselect the multi-minute slow suites
 #   scripts/tier1.sh -m 'not slow'   # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--quick" ]]; then
+    shift
+    set -- -m 'not slow' "$@"
+fi
 
 python -m pytest -x -q "$@"
 python -m benchmarks.run --quick --only bucketing
@@ -17,3 +24,4 @@ python -m benchmarks.run --quick --only fill   # packed/strip parity gate
 python -m benchmarks.run --quick --only pairhmm  # forward-oracle parity gate
 python -m benchmarks.run --quick --only filter   # myers bit-exactness gate
 python -m benchmarks.run --quick --only autotune # table round-trip + parity gate
+python scripts/lint_plans.py                     # trace-time plan lint gate

@@ -1,0 +1,34 @@
+"""Trace-time static analysis of the kernel×engine plan space.
+
+The DP-HLS paper catches mis-parameterized kernels at synthesis time —
+bitwidths that overflow, bands that prune the objective, blocks that
+overflow BRAM — hours before a bitstream exists.  This package is that
+gate for the JAX runtime: it sweeps every registered (kernel × engine ×
+bucket/batch) plan point *without compiling any of them* (abstract
+``eval_shape`` / ``make_jaxpr`` tracing plus un-compiled HLO lowering)
+and reports findings with stable rule IDs:
+
+  * R1xx recurrence legality (PE cell contract, band reach, unit-cost)
+  * R2xx retrace/recompile hazards (cache keys, dtype drift, x64 leaves)
+  * R3xx transfer/sync lints (host callbacks, const captures, HLO scan)
+  * R4xx Pallas/memory budgets (VMEM estimate, grid divisibility, tb)
+  * R5xx registry hygiene (semiring laws, tunable grids, option schema)
+
+Entry points: :func:`lint_all` (the sweep), :func:`lint_point` (one
+point, e.g. a fixture spec via :func:`point_for`), and the
+``scripts/lint_plans.py`` CLI wired into tier-1/CI.
+"""
+from .findings import ERROR, INFO, SEVERITIES, WARNING, Finding, Report
+from .lint import (ALL_RULES, RULES_BY_ID, LintConfig, lint_all, lint_point,
+                   select_rules)
+from .points import PlanPoint, enumerate_points, point_for, resolved_options
+from .context import PointContext
+
+__all__ = [
+    "ERROR", "WARNING", "INFO", "SEVERITIES",
+    "Finding", "Report", "LintConfig",
+    "ALL_RULES", "RULES_BY_ID", "select_rules",
+    "lint_all", "lint_point",
+    "PlanPoint", "PointContext", "enumerate_points", "point_for",
+    "resolved_options",
+]

@@ -1,0 +1,119 @@
+"""Per-point abstract-trace artifacts, built lazily and shared by rules.
+
+Everything here stops strictly before XLA compilation: ``eval_shape``
+(abstract interpretation — output avals only), ``make_jaxpr`` (the traced
+program as a jaxpr, constants included), and ``lower_plan_hlo`` (traced +
+MLIR→HLO conversion, still un-compiled).  One PointContext memoizes each
+artifact so five rules inspecting the same point pay one trace.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import plan as plan_mod
+
+from .points import PlanPoint, resolved_options
+
+
+class PointContext:
+    """Lazy analysis cache around one :class:`PlanPoint`."""
+
+    def __init__(self, point: PlanPoint):
+        self.point = point
+        self.spec = point.spec
+        self.params = point.params
+
+    # -- plan identity ------------------------------------------------------
+    @functools.cached_property
+    def options(self) -> dict:
+        return resolved_options(self.point)
+
+    @functools.cached_property
+    def key(self) -> plan_mod.PlanKey:
+        p, o = self.point, self.options
+        return plan_mod.PlanKey(
+            kernel=self.spec.name, engine=p.engine,
+            bucket_shape=(p.q_shape, p.r_shape), batch_size=p.batch_size,
+            with_traceback=p.with_traceback, strip=o["strip"],
+            tb_pack=o["tb_pack"], semiring=self.spec.semiring.name,
+            xdrop=o["xdrop"])
+
+    @functools.cached_property
+    def fn(self):
+        """Exactly the python callable the plan cache would jit."""
+        return plan_mod._build_fn(self.key, self.spec, self.point.engine)
+
+    @functools.cached_property
+    def arg_avals(self) -> tuple:
+        """(q, r, q_len, r_len) ShapeDtypeStructs at the bucket shape."""
+        p = self.point
+        cdt = jnp.dtype(self.spec.char_dtype)
+        if p.batch_size is None:
+            return (jax.ShapeDtypeStruct(p.q_shape, cdt),
+                    jax.ShapeDtypeStruct(p.r_shape, cdt),
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.int32))
+        b = p.batch_size
+        return (jax.ShapeDtypeStruct((b,) + p.q_shape, cdt),
+                jax.ShapeDtypeStruct((b,) + p.r_shape, cdt),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((b,), jnp.int32))
+
+    # -- abstract artifacts -------------------------------------------------
+    @functools.cached_property
+    def out_avals(self):
+        """Output pytree of ShapeDtypeStructs (abstract eval, no trace
+        artifacts kept)."""
+        return jax.eval_shape(self.fn, self.params, *self.arg_avals)
+
+    @functools.cached_property
+    def jaxpr(self):
+        """The traced ClosedJaxpr of the plan's python callable."""
+        return jax.make_jaxpr(self.fn)(self.params, *self.arg_avals)
+
+    @functools.cached_property
+    def primitives(self) -> Set[str]:
+        """Every primitive name in the jaxpr, sub-jaxprs included."""
+        prims: Set[str] = set()
+
+        def walk(jx):
+            for eqn in jx.eqns:
+                prims.add(eqn.primitive.name)
+                for v in eqn.params.values():
+                    vs = v if isinstance(v, (list, tuple)) else [v]
+                    for x in vs:
+                        if hasattr(x, "jaxpr"):      # ClosedJaxpr
+                            walk(x.jaxpr)
+                        elif hasattr(x, "eqns"):     # raw Jaxpr
+                            walk(x)
+        walk(self.jaxpr.jaxpr)
+        return prims
+
+    @functools.cached_property
+    def consts(self) -> List[Tuple[tuple, str, int]]:
+        """(shape, dtype, nbytes) of every constant the trace captured —
+        closure-captured arrays and trace-time constant folding."""
+        out = []
+        for c in self.jaxpr.consts:
+            arr = np.asarray(c)
+            out.append((arr.shape, str(arr.dtype), int(arr.nbytes)))
+        return out
+
+    @functools.cached_property
+    def hlo(self) -> Optional[str]:
+        """Lowered (un-compiled) HLO text, or ``None`` when this engine
+        cannot lower on the current backend (pallas TPU kernels on CPU)."""
+        p = self.point
+        try:
+            # no explicit options: lower_plan_hlo resolves the same
+            # engine defaults self.options holds
+            return plan_mod.lower_plan_hlo(
+                self.spec, self.params, p.engine, p.q_shape, p.r_shape,
+                batch_size=p.batch_size, with_traceback=p.with_traceback)
+        except Exception:
+            return None

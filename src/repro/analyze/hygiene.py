@@ -1,0 +1,131 @@
+"""Registry-hygiene rules (global scope): the declarative surfaces that
+every other subsystem trusts — semiring algebra, tunable grids, engine
+option schemas — actually satisfy their contracts.
+
+These run once per lint sweep, not per plan point: they check the
+registries themselves, so a violation poisons every point at once (a
+broken ⊕ mis-fills every cell; an option name missing from PlanKey
+crashes every ``get_plan``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.core import semiring as semiring_mod
+from repro.runtime import plan as plan_mod
+from repro.runtime import registry
+from repro.tune import space as tune_space
+
+from .findings import ERROR, Finding
+from .rules import Rule
+
+_PROBES = np.asarray([-3.5, -1.0, 0.0, 0.75, 2.25], dtype=np.float32)
+_TOL = 1e-4
+
+
+def rule_semiring_laws(cfg) -> Iterator[Finding]:
+    """R501: spot-check the semiring laws every engine's ⊕-fold assumes.
+    The fill order freely reassociates and commutes ``combine`` (wavefront
+    diagonals, region reductions), ``reduce`` must be ``combine`` folded,
+    a selective ⊕ must return one of its operands (traceback depends on
+    it), and the ±1e30 sentinel must absorb — an algebra that breaks any
+    of these mis-fills silently on every kernel that declares it."""
+    for obj in sorted(semiring_mod.BY_OBJECTIVE):
+        sr = semiring_mod.BY_OBJECTIVE[obj]
+        where = f"semiring {sr.name!r} (objective {obj!r})"
+        try:
+            c = lambda a, b: float(sr.combine(np.float32(a), np.float32(b)))
+            ok = True
+            for a in _PROBES:
+                for b in _PROBES:
+                    if abs(c(a, b) - c(b, a)) > _TOL:
+                        yield Finding("R501", ERROR,
+                                      f"combine is not commutative at "
+                                      f"({a}, {b}) — wavefront fill order "
+                                      f"is unspecified", where)
+                        ok = False
+                        break
+                if not ok:
+                    break
+            for a, b, d in zip(_PROBES, _PROBES[1:], _PROBES[2:]):
+                lhs = c(a, c(b, d))
+                rhs = c(c(a, b), d)
+                if abs(lhs - rhs) > _TOL:
+                    yield Finding("R501", ERROR,
+                                  f"combine is not associative at "
+                                  f"({a}, {b}, {d}): {lhs} vs {rhs}", where)
+                    break
+            red = float(sr.reduce(_PROBES))
+            fold = _PROBES[0]
+            for v in _PROBES[1:]:
+                fold = c(fold, v)
+            if abs(red - float(fold)) > _TOL:
+                yield Finding("R501", ERROR,
+                              f"reduce disagrees with folded combine: "
+                              f"{red} vs {float(fold)} — region reductions "
+                              f"and PE accumulation diverge", where)
+            if sr.selective:
+                i = int(sr.arg(_PROBES))
+                if abs(red - float(_PROBES[i])) > _TOL:
+                    yield Finding("R501", ERROR,
+                                  f"arg points at element {i} "
+                                  f"({float(_PROBES[i])}) but reduce gives "
+                                  f"{red} — tracebacks start at the wrong "
+                                  f"cell", where)
+            sent = -1e30 if c(-1e30, 0.0) == 0.0 else 1e30
+            for v in _PROBES:
+                if abs(c(sent, float(v)) - float(v)) > _TOL:
+                    yield Finding("R501", ERROR,
+                                  f"sentinel {sent:+.0e} is not absorbed: "
+                                  f"combine(sentinel, {v}) = "
+                                  f"{c(sent, float(v))} — unreachable cells "
+                                  f"leak into scores", where)
+                    break
+        except Exception as e:
+            yield Finding("R501", ERROR,
+                          f"semiring law probe failed: "
+                          f"{type(e).__name__}: {e}", where)
+
+
+def rule_tunable_grid(cfg) -> Iterator[Finding]:
+    """R502: every engine's tunable grid is well-formed — tunables name
+    declared options, grids are non-empty, and every grid value passes
+    the option's own validator.  A bad value otherwise hides until the
+    autotuner measures that cell and ``get_plan`` raises mid-sweep."""
+    for engine in registry.available_engines():
+        for problem in tune_space.grid_findings(engine):
+            yield Finding("R502", ERROR, problem, f"engine {engine!r}")
+
+
+def rule_option_key(cfg) -> Iterator[Finding]:
+    """R503: every non-dynamic engine option is a PlanKey field.  The
+    plan builder forwards resolved options by ``getattr(key, name)``, so
+    an option name outside the PlanKey schema raises AttributeError on
+    the first ``get_plan`` that touches the engine — a registration-time
+    mistake that should not wait for dispatch time."""
+    key_fields = {f.name for f in dataclasses.fields(plan_mod.PlanKey)}
+    for engine in registry.available_engines():
+        where = f"engine {engine!r}"
+        opts = registry.engine_options(engine)
+        for name, default in sorted(opts.items()):
+            if default == "dynamic":
+                continue
+            if name not in key_fields:
+                yield Finding("R503", ERROR,
+                              f"option {name!r} is not a PlanKey field "
+                              f"{sorted(key_fields)} — the plan builder's "
+                              f"getattr(key, {name!r}) raises on first "
+                              f"get_plan", where)
+
+
+GLOBAL_RULES = [
+    Rule("R501", "semiring-laws", ERROR, "global", rule_semiring_laws,
+         "registered semirings satisfy the laws the engines fold under"),
+    Rule("R502", "tunable-grid", ERROR, "global", rule_tunable_grid,
+         "tunable grids name declared options and pass their validators"),
+    Rule("R503", "option-key", ERROR, "global", rule_option_key,
+         "non-dynamic engine options are PlanKey fields"),
+]

@@ -53,14 +53,30 @@ N_SYMBOLS = 32
 UNIT_COST_KERNELS = ("edit_distance", "edit_search")
 
 
-def _check_spec(spec: T.DPKernelSpec) -> None:
+def supports(spec: T.DPKernelSpec):
+    """Static admission check: ``None`` when this engine can compute the
+    spec, else the reason it cannot (the registry's ``supports`` hook —
+    also what :func:`_check_spec` raises at trace time)."""
     if spec.name not in UNIT_COST_KERNELS:
-        raise ValueError(
-            f"myers engine computes the unit-cost edit recurrence and only "
-            f"accepts kernels {UNIT_COST_KERNELS}, got {spec.name!r}")
+        return (f"myers engine computes the unit-cost edit recurrence and "
+                f"only accepts kernels {UNIT_COST_KERNELS}, "
+                f"got {spec.name!r}")
     if spec.band is not None:
-        raise ValueError("myers engine does not support fixed banding; "
-                         "use params['max_dist'] thresholding instead")
+        return ("myers engine does not support fixed banding; "
+                "use params['max_dist'] thresholding instead")
+    if spec.objective != "min":
+        return (f"unit-cost edit distance is a min-objective recurrence, "
+                f"got objective={spec.objective!r}")
+    if spec.region not in (T.REGION_CORNER, T.REGION_LAST_ROW):
+        return (f"myers engine computes corner (distance) or last-row "
+                f"(search) optima only, got region={spec.region!r}")
+    return None
+
+
+def _check_spec(spec: T.DPKernelSpec) -> None:
+    reason = supports(spec)
+    if reason is not None:
+        raise ValueError(reason)
 
 
 def build_peq(query, q_len, n_words: int, word_dtype=None):

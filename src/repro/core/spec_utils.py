@@ -1,9 +1,48 @@
 """Shared helpers used by every back-end engine."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from . import types as T
+
+# The neighbor set a wavefront (anti-diagonal) schedule can legally
+# feed a PE: (di, dj) offsets of the cells whose scores arrive as
+# ``diag``/``up``/``left``.  Any recurrence expressible through the
+# ``spec.pe`` signature is confined to this set by construction — the
+# systolic-schedule soundness invariant the paper's template enforces
+# in hardware and ``repro.analyze`` checks at trace time.
+WAVEFRONT_NEIGHBORS = ((-1, -1), (-1, 0), (0, -1))
+
+
+def pe_abstract_eval(spec: T.DPKernelSpec, params):
+    """Abstract-evaluate one PE cell update without compiling.
+
+    Feeds ``spec.pe`` the exact cell contract the engines vmap across a
+    wavefront — scalar chars, ``(n_layers,)`` neighbor score vectors for
+    each of :data:`WAVEFRONT_NEIGHBORS`, int32 indices — and returns the
+    ``(scores_aval, ptr_aval)`` ShapeDtypeStructs it produces.  This is
+    the linter's ground truth for recurrence-shape legality (a PE whose
+    outputs disagree with the declaration would mis-fill on *every*
+    engine); shape/dtype errors inside the PE propagate as exceptions.
+    """
+    char = jax.ShapeDtypeStruct(spec.char_shape, jnp.dtype(spec.char_dtype))
+    cell = jax.ShapeDtypeStruct((spec.n_layers,),
+                                jnp.dtype(spec.score_dtype))
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    return jax.eval_shape(spec.pe, params, char, char, cell, cell, cell,
+                          idx, idx)
+
+
+def init_abstract_eval(spec: T.DPKernelSpec, params, n: int = 8):
+    """Abstract-evaluate the boundary initializers over an ``(n,)`` index
+    vector, returning ``(row0_aval, col0_aval)`` — the engines reshape
+    these to ``(n, n_layers)`` and cast to ``score_dtype``, so a wrong
+    shape or an x64-promoting init surfaces here before any build."""
+    idx = jax.ShapeDtypeStruct((n,), jnp.int32)
+    row = jax.eval_shape(spec.init_row, params, idx)
+    col = jax.eval_shape(spec.init_col, params, idx)
+    return row, col
 
 
 def band_mask(spec: T.DPKernelSpec, i, j):

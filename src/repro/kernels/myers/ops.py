@@ -12,6 +12,22 @@ from repro.core import myers as M
 from . import kernel as K
 
 
+def vmem_bytes(spec, q_bucket: int, r_bucket: int, params=None) -> int:
+    """Static VMEM footprint estimate of the Myers Pallas kernel at a
+    bucket shape: the per-column Eq table (the dominant term — R columns
+    × n_words words, gathered XLA-side and streamed in whole), the
+    VP/VN column carries, and the last-row score track.  Pure shape
+    arithmetic, no trace — the plan linter's budget check."""
+    wb = K.WORD_BITS
+    n_words = max(1, -(-int(q_bucket) // wb))
+    R = max(int(r_bucket), 1)
+    word_b = 4                                # kernel uses uint32 words
+    return (R * n_words * word_b              # eq_cols block
+            + 3 * n_words * word_b            # VP/VN/score carries
+            + 2 * 4                           # lens (SMEM)
+            + 3 * 4)                          # score/best/best_j outs
+
+
 def run(spec, params, query, ref, q_len=None, r_len=None,
         interpret: bool = False) -> T.DPResult:
     M._check_spec(spec)

@@ -14,6 +14,43 @@ from repro.core.engine import resolve_tb_pack
 from . import kernel as K
 
 
+def vmem_bytes(spec, q_bucket: int, r_bucket: int, params=None,
+               n_pe: int = 32, tb_pack: Optional[int] = None) -> int:
+    """Static VMEM footprint estimate of one grid step of the wavefront
+    Pallas kernel at a bucket shape — the sum of every BlockSpec block,
+    the row-buffer scratch, and the loop carries, with the grid-mapped
+    blocks double-counted for Pallas' input/output pipelining.  Pure
+    arithmetic over the same shapes :func:`wavefront_fill` declares (no
+    trace, no compile) — the plan linter's budget check."""
+    pack = resolve_tb_pack(spec, tb_pack)
+    if n_pe % pack:
+        pack = 1
+    Q = -(-q_bucket // n_pe) * n_pe          # padded up to the lane strip
+    R = max(int(r_bucket), 1)
+    L = spec.n_layers
+    sb = jnp.dtype(spec.score_dtype).itemsize
+    ce = 1
+    for d in spec.char_shape:
+        ce *= d
+    cb = ce * jnp.dtype(spec.char_dtype).itemsize
+    wt = n_pe + R - 1
+    # grid-mapped blocks (double-buffered by the pipeline)
+    piped = (n_pe * cb                        # query strip
+             + (n_pe // pack) * wt            # tb out block (uint8)
+             + n_pe * sb + n_pe * 4)          # best / best_j out blocks
+    # whole-array blocks resident across the grid
+    resident = (R * cb                        # ref stream
+                + (R + 1) * L * sb            # init_row
+                + (Q + 1) * L * sb            # init_col
+                + (R + 1) * L * sb)           # row_buf scratch
+    if params is not None:
+        import numpy as np
+        for leaf in jax.tree_util.tree_leaves(params):
+            resident += int(np.asarray(leaf).nbytes)
+    carries = 2 * n_pe * L * sb + n_pe * cb + n_pe * (sb + 4)
+    return 2 * piped + resident + carries
+
+
 def run(spec, params, query, ref, q_len=None, r_len=None,
         interpret: bool = False, n_pe: int = 32,
         tb_pack: Optional[int] = None) -> T.DPResult:

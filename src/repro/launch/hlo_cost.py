@@ -268,6 +268,34 @@ def analyze(text: str, n_devices: int = 1) -> Cost:
     return _analyze_comps(parse_computations(text), n_devices)
 
 
+# custom-call targets that round-trip through the host: python callbacks
+# (pure/io/debug), legacy host_callback, and explicit host transfers.
+# Plain custom-calls (e.g. LAPACK wrappers) are device-side and fine.
+_HOST_TARGET_RE = re.compile(
+    r"custom_call_target=\"[^\"]*(callback|host)[^\"]*\"", re.IGNORECASE)
+_HOST_OPS = ("infeed", "outfeed", "send", "send-done", "recv", "recv-done")
+
+
+def host_transfer_instrs(text: str) -> List[Tuple[str, str, str]]:
+    """Host round-trips in an HLO dump: ``(computation, opcode, detail)``
+    per offending instruction — custom-calls whose target is a host
+    callback, plus infeed/outfeed/send/recv.  A jitted DP fill should
+    contain none; any hit stalls the device pipeline every dispatch
+    (the transfer/sync lint of ``repro.analyze``)."""
+    out: List[Tuple[str, str, str]] = []
+    for comp, instrs in parse_computations(text).items():
+        if comp == "__entry__":
+            continue                       # alias of the entry computation
+        for instr in instrs:
+            if instr.op == "custom-call":
+                m = _HOST_TARGET_RE.search(instr.rest)
+                if m:
+                    out.append((comp, instr.op, m.group(0)))
+            elif instr.op in _HOST_OPS:
+                out.append((comp, instr.op, instr.name))
+    return out
+
+
 def analyze_plan(spec, params, engine_name: str,
                  q_shape: tuple, r_shape: tuple, *,
                  batch_size: Optional[int] = None,

@@ -305,8 +305,14 @@ def resolve_engine_options(spec: T.DPKernelSpec, engine_name: str,
 def resolve_engine_opts(spec: T.DPKernelSpec, engine_name: str,
                         strip: Optional[int] = None,
                         tb_pack: Optional[int] = None) -> tuple[int, int]:
-    """Back-compat shim: the (strip, tb_pack) pair from
-    :func:`resolve_engine_options`."""
+    """Deprecated: the (strip, tb_pack) pair from
+    :func:`resolve_engine_options` — call that instead (it returns every
+    declared knob, validates names, and is what the plan cache uses)."""
+    import warnings
+    warnings.warn(
+        "resolve_engine_opts is deprecated; use resolve_engine_options "
+        "(returns the full resolved option dict)",
+        DeprecationWarning, stacklevel=2)
     r = resolve_engine_options(spec, engine_name,
                                {"strip": strip, "tb_pack": tb_pack})
     return r["strip"], r["tb_pack"]
@@ -390,7 +396,9 @@ def traceback_bytes(spec: T.DPKernelSpec, q_bucket: int, r_bucket: int, *,
     (n_pe+R-1) bytes (Q padded up to the lane strip)."""
     if spec.traceback is None:
         return 0
-    strip_r, pack_r = resolve_engine_opts(spec, engine_name, strip, tb_pack)
+    r = resolve_engine_options(spec, engine_name,
+                               {"strip": strip, "tb_pack": tb_pack})
+    strip_r, pack_r = r["strip"], r["tb_pack"]
     if engine_name.startswith("pallas"):
         n_pe = PALLAS_N_PE
         n_chunks = -(-q_bucket // n_pe)

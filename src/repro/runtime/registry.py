@@ -32,6 +32,13 @@ class _Entry:
     # Only *result-preserving* knobs belong here (schedule choices like
     # strip / tb_pack); knobs that change outputs (xdrop) never do.
     tunable: Mapping[str, tuple] = dataclasses.field(default_factory=dict)
+    # supports(spec) -> None (accepted) | str (reason the engine cannot
+    # run this kernel).  None = accepts every spec.
+    supports: Optional[Callable] = None
+    # whether the engine can emit a traceback pointer store (score-only
+    # engines — banded, myers — declare False so plan enumeration never
+    # requests a path from them)
+    traceback: bool = True
 
 
 _REGISTRY: dict[str, _Entry] = {}
@@ -42,6 +49,8 @@ def register_engine(name: str, fn: Optional[Callable] = None, *,
                     loader: Optional[Callable] = None, doc: str = "",
                     options: Optional[Mapping[str, object]] = None,
                     tunable: Optional[Mapping[str, tuple]] = None,
+                    supports: Optional[Callable] = None,
+                    traceback: bool = True,
                     overwrite: bool = False) -> None:
     """Register engine ``name`` either eagerly (``fn``) or deferred
     (``loader() -> fn``, imported/built on first :func:`get_engine`).
@@ -60,6 +69,15 @@ def register_engine(name: str, fn: Optional[Callable] = None, *,
     declared (the tuner asserts winners bit-identical to the default
     plan, so an output-changing knob here would never survive anyway —
     declaring it is an error caught at registration).
+
+    ``supports`` is the engine's *static admission predicate*:
+    ``supports(spec) -> None`` when the engine can run the kernel, or a
+    human-readable reason string when it cannot (e.g. the myers engine
+    hard-codes the unit-cost recurrence, the banded engine needs
+    ``spec.band``).  ``None`` means the engine accepts every spec.  The
+    plan linter (``repro.analyze``) uses this to enumerate exactly the
+    legal kernel×engine plan points.  ``traceback=False`` marks
+    score-only engines that never emit a pointer store.
     """
     if (fn is None) == (loader is None):
         raise ValueError("pass exactly one of fn= or loader=")
@@ -76,7 +94,15 @@ def register_engine(name: str, fn: Optional[Callable] = None, *,
         _REGISTRY[name] = _Entry(name=name, fn=fn, loader=loader, doc=doc,
                                  options=opts,
                                  tunable={k: tuple(v)
-                                          for k, v in tunable.items()})
+                                          for k, v in tunable.items()},
+                                 supports=supports, traceback=traceback)
+
+
+def unregister_engine(name: str) -> None:
+    """Remove an engine registration (test fixtures seeding violations
+    for the plan linter; production code never unregisters)."""
+    with _LOCK:
+        _REGISTRY.pop(name, None)
 
 
 def get_engine(name: str) -> Callable:
@@ -114,6 +140,30 @@ def engine_tunable(name: str) -> dict[str, tuple]:
     result-preserving schedule knobs return ``{}`` (nothing to tune)."""
     entry = _REGISTRY.get(name)
     return dict(entry.tunable) if entry else {}
+
+
+def engine_supports(name: str, spec) -> Optional[str]:
+    """Why engine ``name`` cannot run ``spec`` — ``None`` when it can.
+
+    The static admission check the plan linter and point enumeration
+    consult *without* building anything: a non-``None`` string names the
+    structural incompatibility (wrong kernel family, missing band, ...).
+    Unknown engines report themselves unsupported rather than raising so
+    sweeps over a filtered engine list stay total.
+    """
+    entry = _REGISTRY.get(name)
+    if entry is None:
+        return f"unknown engine {name!r}"
+    if entry.supports is None:
+        return None
+    return entry.supports(spec)
+
+
+def engine_traceback(name: str) -> bool:
+    """True when engine ``name`` can emit a traceback pointer store;
+    score-only engines (banded, myers) return False."""
+    entry = _REGISTRY.get(name)
+    return bool(entry.traceback) if entry else False
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +204,19 @@ def _load_myers_pallas(interpret: bool):
     return functools.partial(mops.run, interpret=interpret)
 
 
+def _banded_supports(spec) -> Optional[str]:
+    if spec.band is None:
+        return "banded engine requires spec.band (fixed banding width)"
+    return None
+
+
+def _myers_supports(spec) -> Optional[str]:
+    # deferred import mirrors the engine loaders: the predicate is the
+    # engine's own admission check, exposed without materializing it
+    from repro.core import myers
+    return myers.supports(spec)
+
+
 register_engine("reference", loader=_load_reference,
                 doc="row-major oracle (C-simulation analogue)")
 # the per-backend strip default lives with the engine (one source of
@@ -174,7 +237,8 @@ register_engine("wavefront", loader=_load_wavefront,
                          "tb_pack": (1, 2, 4, 8)})
 register_engine("banded", loader=_load_banded,
                 doc="O(n*W) band-packed lanes, score-only",
-                options={"xdrop": None})
+                options={"xdrop": None},
+                supports=_banded_supports, traceback=False)
 register_engine("pallas", loader=lambda: _load_pallas(False),
                 doc="Pallas TPU kernel of the wavefront schedule",
                 options={"tb_pack": None},
@@ -185,9 +249,12 @@ register_engine("pallas_interpret", loader=lambda: _load_pallas(True),
                 tunable={"tb_pack": (1, 2, 4, 8)})
 register_engine("myers", loader=_load_myers,
                 doc="bit-parallel unit-cost edit distance (Myers 1999), "
-                    "64/32 DP cells per word; kernels #16/#17 only")
+                    "64/32 DP cells per word; kernels #16/#17 only",
+                supports=_myers_supports, traceback=False)
 register_engine("myers_pallas", loader=lambda: _load_myers_pallas(False),
-                doc="Pallas TPU kernel of the Myers bit-vector recurrence")
+                doc="Pallas TPU kernel of the Myers bit-vector recurrence",
+                supports=_myers_supports, traceback=False)
 register_engine("myers_pallas_interpret",
                 loader=lambda: _load_myers_pallas(True),
-                doc="Myers Pallas kernel in interpreter mode (CPU-testable)")
+                doc="Myers Pallas kernel in interpreter mode (CPU-testable)",
+                supports=_myers_supports, traceback=False)

@@ -18,7 +18,8 @@ preserving schedule knobs (``strip``, ``tb_pack``):
 * ``warm``   — pre-compile a service's channel grid at boot so the
   first request lands hot.
 """
-from .space import default_options, enumerate_space, tunable_names
+from .space import (default_options, enumerate_space, grid_findings,
+                    tunable_names)
 from .cost import fill_trips, point_cells, predict, rank
 from .search import assert_parity, make_batch, run_sweep, tune_point
 from .table import (ENV_VAR, SCHEMA_VERSION, TuningTable, active_table,
@@ -26,7 +27,7 @@ from .table import (ENV_VAR, SCHEMA_VERSION, TuningTable, active_table,
 from .warm import warm_grid, warm_plan
 
 __all__ = [
-    "default_options", "enumerate_space", "tunable_names",
+    "default_options", "enumerate_space", "grid_findings", "tunable_names",
     "fill_trips", "point_cells", "predict", "rank",
     "assert_parity", "make_batch", "run_sweep", "tune_point",
     "ENV_VAR", "SCHEMA_VERSION", "TuningTable", "active_table",

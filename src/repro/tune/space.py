@@ -31,6 +31,36 @@ def default_options(spec, engine_name: str) -> dict:
     return {n: resolved[n] for n in tunable_names(engine_name)}
 
 
+def grid_findings(engine_name: str) -> list[str]:
+    """Static legality problems in an engine's declared tunable grid —
+    one human-readable string per violation, ``[]`` when clean.
+
+    Registration already enforces ``tunable ⊆ options``; this validates
+    the *values*: every candidate must survive the runtime's own option
+    validators (``strip`` a positive integer, ``tb_pack`` a power of two
+    — a grid point the plan cache would reject at request time is dead
+    weight the autotuner re-discovers on every sweep).  The plan
+    linter's registry-hygiene rule calls this per engine.
+    """
+    problems: list[str] = []
+    opts = registry.engine_options(engine_name)
+    for name, values in sorted(registry.engine_tunable(engine_name).items()):
+        if name not in opts:
+            problems.append(
+                f"tunable {name!r} not declared in options={sorted(opts)}")
+        if not values:
+            problems.append(f"tunable {name!r} declares an empty grid")
+        for v in values:
+            try:
+                if name == "tb_pack":
+                    plan_mod.validate_pow2_option(name, v)
+                else:
+                    plan_mod.validate_int_option(name, v, minimum=1)
+            except ValueError as e:
+                problems.append(f"grid value {name}={v!r}: {e}")
+    return problems
+
+
 def enumerate_space(spec, engine_name: str) -> list[dict]:
     """Every legal, distinct tunable-option combination for this spec.
 

@@ -1,0 +1,336 @@
+"""The plan linter: every rule family fires on a seeded violation and
+stays silent on the healthy registry.
+
+Fixtures are built by ``dataclasses.replace``-ing a real zoo spec with
+one deliberate defect (a mis-shaped PE, an f64 declaration, a closure-
+captured megabyte, ...) and linting that single point with the rule
+under test selected — so each test proves both that the rule *fires*
+and that it fires for the stated reason."""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import analyze
+from repro.analyze import lint as lint_mod
+from repro.core import kernels_zoo
+from repro.core import types as T
+from repro.runtime import registry
+
+
+def _point(spec, params, engine="reference", bucket=(32, 32), batch=2):
+    return analyze.point_for(spec, params, engine, bucket, batch)
+
+
+def _findings(spec, params, rule, engine="reference", bucket=(32, 32),
+              batch=2, config=None):
+    report = analyze.lint_point(_point(spec, params, engine, bucket, batch),
+                                rules=[rule], config=config)
+    return [f for f in report.findings if f.rule == rule]
+
+
+def _rule_ids(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# R1xx — recurrence legality
+# ---------------------------------------------------------------------------
+def test_r101_fires_on_wrong_pe_shape():
+    spec, params = kernels_zoo.make("global_linear")
+
+    def bad_pe(p, q, r, diag, up, left, i, j):   # scores[2] for n_layers=1
+        s, ptr = spec.pe(p, q, r, diag, up, left, i, j)
+        return jnp.concatenate([s, s]), ptr
+
+    bad = dataclasses.replace(spec, pe=bad_pe)
+    found = _findings(bad, params, "R101")
+    assert found and all(f.severity == analyze.ERROR for f in found)
+    assert "n_layers" in found[0].message
+
+
+def test_r101_fires_on_pe_dtype_mismatch():
+    spec, params = kernels_zoo.make("global_linear")   # int32 scores
+
+    def float_pe(p, q, r, diag, up, left, i, j):
+        s, ptr = spec.pe(p, q, r, diag, up, left, i, j)
+        return s.astype(jnp.float32), ptr
+
+    bad = dataclasses.replace(spec, pe=float_pe)
+    found = _findings(bad, params, "R101")
+    assert found and "score_dtype" in found[0].message
+
+
+def test_r101_clean_on_every_zoo_kernel():
+    for kid in kernels_zoo.KERNELS:
+        spec, params = kernels_zoo.make(kid)
+        assert not _findings(spec, params, "R101"), spec.name
+
+
+def test_r102_fires_on_unreachable_band():
+    spec, params = kernels_zoo.make("banded_global_linear")   # band=16
+    found = _findings(spec, params, "R102", engine="banded",
+                      bucket=(32, 128))
+    assert found and found[0].severity == analyze.ERROR
+    assert "unreachable" in found[0].message
+    # ... and is quiet when the corner is inside the band
+    assert not _findings(spec, params, "R102", engine="banded",
+                         bucket=(64, 64))
+
+
+def test_r103_fires_on_non_unit_cost_pe():
+    spec, params = kernels_zoo.make("edit_distance")
+
+    def weighted_pe(p, q, r, diag, up, left, i, j):   # mismatch costs 2
+        sub = diag[0] + jnp.where(q == r, 0, 2)
+        best = jnp.minimum(sub, jnp.minimum(up[0] + 1, left[0] + 1))
+        return best[None], jnp.int32(0)
+
+    bad = dataclasses.replace(spec, pe=weighted_pe)
+    found = _findings(bad, params, "R103", engine="myers")
+    assert found and found[0].severity == analyze.ERROR
+    assert "unit-cost" in found[0].message
+    # healthy edit_distance passes the probe
+    assert not _findings(spec, params, "R103", engine="myers")
+
+
+def test_r103_fires_on_wrong_boundary_init():
+    spec, params = kernels_zoo.make("edit_distance")
+    bad = dataclasses.replace(
+        spec, init_col=lambda p, idx: jnp.zeros_like(idx)[:, None])
+    found = _findings(bad, params, "R103", engine="myers")
+    assert found and "init_col" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# R2xx — retrace / recompile hazards
+# ---------------------------------------------------------------------------
+def test_r201_fires_on_unhashable_spec():
+    spec, params = kernels_zoo.make("dtw")
+    bad = dataclasses.replace(spec, char_shape=[2])    # list: unhashable
+    found = _findings(bad, params, "R201")
+    assert found and found[0].severity == analyze.ERROR
+    assert "unhashable" in found[0].message
+
+
+def test_r202_fires_on_x64_downcast():
+    if jax.config.jax_enable_x64:
+        pytest.skip("x64 enabled; downcast drift not reproducible")
+    spec, params = kernels_zoo.make("dtw")
+    bad = dataclasses.replace(spec, score_dtype=jnp.float64)
+    found = _findings(bad, params, "R202")
+    assert found and found[0].severity == analyze.ERROR
+    assert "float64" in found[0].message and "float32" in found[0].message
+
+
+def test_r203_fires_on_f64_param_leaf():
+    spec, params = kernels_zoo.make("global_linear")
+    bad_params = dict(params, drift=np.float64(1.5))
+    found = _findings(spec, bad_params, "R203")
+    assert found and "float64" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# R3xx — transfer / sync
+# ---------------------------------------------------------------------------
+def test_r301_fires_on_debug_callback_in_pe():
+    spec, params = kernels_zoo.make("global_linear")
+
+    def chatty_pe(p, q, r, diag, up, left, i, j):
+        jax.debug.print("cell {} {}", i, j)
+        return spec.pe(p, q, r, diag, up, left, i, j)
+
+    bad = dataclasses.replace(spec, pe=chatty_pe)
+    found = _findings(bad, params, "R301")
+    assert found and all(f.severity == analyze.ERROR for f in found)
+    assert "callback" in found[0].message
+
+
+def test_r302_fires_on_large_const_capture():
+    spec, params = kernels_zoo.make("global_linear")
+    baked = jnp.asarray(np.zeros((512, 512), np.float32))   # 1 MiB
+
+    def leaky_pe(p, q, r, diag, up, left, i, j):
+        s, ptr = spec.pe(p, q, r, diag, up, left, i, j)
+        return s + baked[0, 0].astype(s.dtype), ptr
+
+    bad = dataclasses.replace(spec, pe=leaky_pe)
+    found = _findings(bad, params, "R302")
+    assert found and found[0].severity == analyze.WARNING
+    assert "constant" in found[0].message
+    # over the error threshold the same capture is fatal
+    cfg = analyze.LintConfig(const_error_bytes=1 << 20)
+    found = _findings(bad, params, "R302", config=cfg)
+    assert found and found[0].severity == analyze.ERROR
+
+
+def test_r303_scans_lowered_hlo_when_available():
+    spec, params = kernels_zoo.make("global_linear")
+    point = _point(spec, params, "wavefront")
+    ctx = analyze.PointContext(point)
+    assert ctx.hlo is not None                 # wavefront lowers on CPU
+    found = _findings(spec, params, "R303", engine="wavefront")
+    assert not [f for f in found if f.severity != analyze.INFO]
+
+
+# ---------------------------------------------------------------------------
+# R4xx — budgets
+# ---------------------------------------------------------------------------
+def test_r401_fires_on_vmem_overflow():
+    spec, params = kernels_zoo.make("global_linear")
+    found = _findings(spec, params, "R401", engine="pallas_interpret",
+                      bucket=(64, 1 << 20))
+    assert found and found[0].severity == analyze.ERROR
+    assert "VMEM" in found[0].message
+    assert not _findings(spec, params, "R401", engine="pallas_interpret",
+                         bucket=(64, 64))
+
+
+def test_r402_fires_on_silent_tb_pack_reset():
+    from repro.analyze import rules as rules_mod
+    spec, params = kernels_zoo.make("global_linear")
+    ctx = analyze.PointContext(_point(spec, params, "pallas"))
+    ctx.__dict__["options"] = dict(ctx.options, tb_pack=3)   # 3 ∤ 32
+    found = list(rules_mod.rule_pallas_grid(ctx, analyze.LintConfig()))
+    assert any(f.severity == analyze.WARNING and "tb_pack" in f.message
+               for f in found)
+
+
+def test_r403_fires_on_traceback_budget():
+    spec, params = kernels_zoo.make("global_linear")
+    cfg = analyze.LintConfig(tb_budget_bytes=1024)
+    found = _findings(spec, params, "R403", engine="wavefront",
+                      bucket=(64, 64), batch=8, config=cfg)
+    assert found and found[0].severity == analyze.WARNING
+    assert "traceback" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# R5xx — registry hygiene (global scope)
+# ---------------------------------------------------------------------------
+def _global_findings(rule):
+    report = analyze.lint_all(points=[], rules=[rule])
+    return [f for f in report.findings if f.rule == rule]
+
+
+def test_r501_fires_on_broken_semiring(monkeypatch):
+    from repro.core import semiring as S
+    broken = S.Semiring("subtract", lambda a, b: a - b,   # not commutative
+                        lambda x, axis=None: jnp.sum(x, axis),
+                        jnp.argmax, selective=False)
+    monkeypatch.setitem(S.BY_OBJECTIVE, "subtract", broken)
+    found = _global_findings("R501")
+    assert any("subtract" in f.where for f in found)
+    assert all(f.severity == analyze.ERROR for f in found)
+
+
+def test_r501_clean_on_builtin_semirings():
+    assert not _global_findings("R501")
+
+
+def test_r502_fires_on_bad_tunable_grid():
+    registry.register_engine(
+        "lint_bad_grid", lambda *a, **k: None,
+        options={"strip": 8}, tunable={"strip": (0, 8)},   # 0 invalid
+        overwrite=True)
+    try:
+        found = _global_findings("R502")
+        assert found and all(f.severity == analyze.ERROR for f in found)
+        assert any("lint_bad_grid" in f.where for f in found)
+    finally:
+        registry.unregister_engine("lint_bad_grid")
+    assert not _global_findings("R502")
+
+
+def test_r503_fires_on_non_plankey_option():
+    registry.register_engine(
+        "lint_bad_opt", lambda *a, **k: None,
+        options={"blocksize": 4}, overwrite=True)   # not a PlanKey field
+    try:
+        found = _global_findings("R503")
+        assert found and "blocksize" in found[0].message
+    finally:
+        registry.unregister_engine("lint_bad_opt")
+    assert not _global_findings("R503")
+
+
+# ---------------------------------------------------------------------------
+# sweep plumbing
+# ---------------------------------------------------------------------------
+def test_enumerate_points_derives_from_registries():
+    points, skipped = analyze.enumerate_points(bucket=(64, 64))
+    pairs = {(p.kernel, p.engine) for p in points}
+    assert ("global_linear", "wavefront") in pairs
+    assert ("edit_distance", "myers") in pairs
+    # banded admits only kernels with a band; the skip records the reason
+    assert ("global_linear", "banded") not in pairs
+    assert any("global_linear×banded" in s for s in skipped)
+    # traceback only where both kernel FSM and engine support exist
+    by = {(p.kernel, p.engine): p for p in points}
+    assert by[("global_linear", "wavefront")].with_traceback
+    assert not by[("edit_distance", "myers")].with_traceback
+
+
+def test_registry_sweep_is_clean_fast_subset():
+    report = analyze.lint_all(kernels=["global_linear", "edit_distance"],
+                              config=analyze.LintConfig(hlo_rules=False))
+    assert report.ok, report.format_text(verbose=True)
+    assert report.points > 0 and not report.errors
+
+
+def test_select_rules_prefixes():
+    ids = {r.id for r in analyze.select_rules(["R3"])}
+    assert ids == {"R301", "R302", "R303"}
+    ids = {r.id for r in analyze.select_rules(None, ignore=["R3", "R5"])}
+    assert ids and not any(i.startswith(("R3", "R5")) for i in ids)
+    with pytest.raises(ValueError, match="unknown rule"):
+        analyze.select_rules(["R9"])
+
+
+def test_crashing_rule_is_reported_not_swallowed():
+    spec, params = kernels_zoo.make("global_linear")
+    report = analyze.Report()
+    bad_rule = lint_mod.Rule("R101", "boom", analyze.ERROR, "point",
+                             lambda ctx, cfg: 1 / 0)
+    lint_mod._run_rule(bad_rule, report,
+                       analyze.PointContext(_point(spec, params)),
+                       analyze.LintConfig())
+    assert report.errors and "crashed" in report.errors[0].message
+
+
+def test_report_json_roundtrip():
+    report = analyze.lint_all(kernels=["dtw"], engines=["reference"],
+                              config=analyze.LintConfig(hlo_rules=False))
+    blob = json.loads(report.to_json())
+    assert blob["points"] == 1
+    assert set(blob["counts"]) == {"error", "warning", "info"}
+    assert isinstance(blob["findings"], list)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_exit_codes_and_json(capsys):
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).parent.parent / "scripts" / "lint_plans.py"
+    mod_spec = importlib.util.spec_from_file_location("lint_plans", path)
+    cli = importlib.util.module_from_spec(mod_spec)
+    mod_spec.loader.exec_module(cli)
+
+    rc = cli.main(["--kernels", "dtw", "--engines", "reference",
+                   "--no-hlo", "--json"])
+    blob = json.loads(capsys.readouterr().out)
+    assert rc == 0 and blob["counts"]["error"] == 0
+
+    rc = cli.main(["--list-rules"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "R101" in out and "R503" in out
+
+    rc = cli.main(["--rules", "R9x"])
+    assert rc == 2

@@ -422,3 +422,13 @@ def test_service_budget_sized_blocks(rng):
         direct = align(spec, params, jnp.asarray(req.query),
                        jnp.asarray(req.ref), with_traceback=False)
         assert req.result["score"] == pytest.approx(float(direct.score))
+
+
+def test_resolve_engine_opts_shim_warns_and_matches():
+    # legacy alias: same resolution, plus a DeprecationWarning nudging
+    # callers to resolve_engine_options
+    spec, _ = kernels_zoo.make("global_linear")
+    with pytest.warns(DeprecationWarning, match="resolve_engine_options"):
+        legacy = plan_mod.resolve_engine_opts(spec, "wavefront", strip=4)
+    full = plan_mod.resolve_engine_options(spec, "wavefront", {"strip": 4})
+    assert legacy == (full["strip"], full["tb_pack"])

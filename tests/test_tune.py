@@ -114,6 +114,21 @@ class TestTable:
         t.entries[key] = {"options": {"strip": 16}}
         assert t.lookup_options("k", "wavefront", (64, 64), 8) is None
 
+    def test_foreign_backend_never_matches(self):
+        t = tune.TuningTable()
+        foreign = tune.entry_key("k", "wavefront", (64, 64), 8,
+                                 backend="tpu-not-ours")
+        t.entries[foreign] = {"options": {"strip": 16}}
+        # the backend is part of the key, so the entry is structurally
+        # invisible here ...
+        assert t.lookup_options("k", "wavefront", (64, 64), 8) is None
+        # ... and re-keying the same point for *this* host matches again,
+        # proving the miss above is the backend and nothing else
+        native = tune.entry_key("k", "wavefront", (64, 64), 8)
+        t.entries[native] = {"options": {"strip": 16}}
+        assert t.lookup_options("k", "wavefront", (64, 64), 8) == \
+            {"strip": 16}
+
     def test_env_off_disables_installed_table(self, monkeypatch):
         t = tune.TuningTable()
         tune.set_table(t)
@@ -187,6 +202,23 @@ class TestGetPlanConsultsTable:
         key = plan_mod.get_plan(spec, "wavefront", (64,), (64,),
                                 batch_size=4).key
         assert key.strip == baseline_strip
+
+    def test_backend_mismatch_falls_back_to_defaults(self, linear):
+        # a table recorded on another backend/jax build must not steer
+        # this host's plans — get_plan silently falls back to defaults
+        spec, _ = linear
+        t = tune.TuningTable()
+        key = tune.entry_key("global_linear", "wavefront", (32, 32), 4,
+                             backend="tpu-not-ours", jax_version="9.9.9")
+        t.entries[key] = {"options": {"strip": 16, "tb_pack": 4}}
+        tune.set_table(t)
+        plan_mod.clear_plan_cache(keep_stats=True)
+        baseline = plan_mod.resolve_engine_options(spec, "wavefront", {})
+        got = plan_mod.get_plan(spec, "wavefront", (32,), (32,),
+                                batch_size=4).key
+        assert (got.strip, got.tb_pack) == \
+            (baseline["strip"], baseline["tb_pack"])
+        assert (got.strip, got.tb_pack) != (16, 4)
 
 
 # ---------------------------------------------------------------------------
