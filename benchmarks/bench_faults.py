@@ -1,0 +1,176 @@
+"""Chaos benchmark: the gateway's fault-tolerance contract under fire.
+
+A mixed-length request stream drains through ``AlignmentService`` three
+ways — a fault-free inline oracle, a fault-free 4-worker pool, and a
+4-worker pool whose :class:`~repro.serve.FaultPlan` kills 2 workers
+mid-stream — and the run *asserts* the robustness invariants rather than
+just timing them:
+
+* every submitted request completes (none lost, none hung);
+* per-request results are bit-identical to the no-fault runs (recovery
+  replays work, it never changes answers — batch composition does not
+  leak into per-row results);
+* zero double-completions (``stats['completed']`` equals the request
+  count exactly: generation counters discarded every stale harvest);
+* the kill schedule fired as planned and the stranded batches were
+  reclaimed by the heartbeat deadline.
+
+A fourth scenario injects seeded launch/harvest failures plus harvest
+latency (``fail_launch_p``/``fail_harvest_p``/``latency_s``) and checks
+the bounded-retry machinery converges to the same bit-identical results
+without dead letters.
+
+Headlines: ``recovery_s`` (kill detected -> stranded work requeued) and
+``goodput_rps_faulty`` (completed requests per wall second with 2 of 4
+workers dead).  Any invariant violation raises, which fails the
+benchmark orchestrator (nonzero exit) — this is the chaos gate.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.serve import AlignmentService, FaultPlan
+
+from .bench_serving import _clone, _stream
+from .common import emit
+
+KERNEL = "global_affine"
+HEADLINES = {"goodput_rps_faulty": "higher"}
+
+
+def _watch_recovery(svc, done: threading.Event) -> dict:
+    """Poll stats for the kill -> redispatch timeline (the supervisor
+    thread is busy running ``serve``); returns the shared dict."""
+    seen: dict = {"t_kill": None, "t_recover": None}
+
+    def loop():
+        while not done.is_set():
+            now = time.perf_counter()
+            if seen["t_kill"] is None and svc.stats["killed"]:
+                seen["t_kill"] = now
+            if seen["t_kill"] is not None and seen["t_recover"] is None \
+                    and svc.stats["redispatched"] > 0:
+                seen["t_recover"] = now
+                return
+            time.sleep(0.002)
+
+    threading.Thread(target=loop, daemon=True).start()
+    return seen
+
+
+def _check(reqs, res_ref, stats, label: str):
+    unresolved = [r.rid for r in reqs if r.result is None]
+    if unresolved:
+        raise AssertionError(f"{label}: {len(unresolved)} requests never "
+                             f"resolved (e.g. rid {unresolved[:5]})")
+    failed = [r.rid for r in reqs if r.result.get("failed")]
+    if failed:
+        raise AssertionError(f"{label}: {len(failed)} requests dead-"
+                             f"lettered (e.g. rid {failed[:5]})")
+    if [r.result for r in reqs] != res_ref:
+        diff = [r.rid for r, want in zip(reqs, res_ref)
+                if r.result != want]
+        raise AssertionError(f"{label}: results diverge from the no-fault "
+                             f"run at rid {diff[:5]}")
+    if stats["completed"] != len(reqs):
+        raise AssertionError(
+            f"{label}: completed {stats['completed']} != {len(reqs)} "
+            f"submitted — lost or double-counted work")
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    n = 64 if quick else 256
+    block = 2 if quick else 8
+    lo, hi = 24, 128
+    base = _stream(rng, n, lo, hi)
+
+    def service(**kw):
+        # coalesce off: a request's bucket (and so its padded shape) must
+        # not depend on queue state, or bit-identity across schedules is
+        # not even well-defined
+        return AlignmentService(max_len=hi, block=block, coalesce=False,
+                                pipeline_depth=2, **kw)
+
+    # -- fault-free oracle (inline drain; also compiles every bucket) --------
+    oracle = service()
+    reqs = _clone(base)
+    oracle.submit_all(reqs)
+    oracle.drain()
+    res_ref = [r.result for r in reqs]
+
+    # -- fault-free 4-worker pool --------------------------------------------
+    svc = service()
+    reqs = _clone(base)
+    svc.submit_all(reqs)
+    t0 = time.perf_counter()
+    stats = svc.serve(n_workers=4, timeout_s=600.0)
+    wall_clean = time.perf_counter() - t0
+    _check(reqs, res_ref, stats, "clean pool")
+
+    # -- chaos: kill 2 of 4 workers mid-stream -------------------------------
+    plan = FaultPlan(seed=0, kill={"w0": 1, "w1": 1})
+    svc = service(fault_plan=plan, redispatch_after=0.75, max_retries=4)
+    reqs = _clone(base)
+    svc.submit_all(reqs)
+    finished = threading.Event()
+    seen = _watch_recovery(svc, finished)
+    t0 = time.perf_counter()
+    stats = svc.serve(n_workers=4, timeout_s=600.0)
+    wall_faulty = time.perf_counter() - t0
+    finished.set()
+    _check(reqs, res_ref, stats, "chaos pool")
+    killed = sorted(k["worker"] for k in stats["killed"])
+    if killed != ["w0", "w1"]:
+        raise AssertionError(f"kill schedule misfired: killed={killed}")
+    if stats["redispatched"] < 1:
+        raise AssertionError("no stranded batch was ever redispatched")
+    if seen["t_kill"] is None or seen["t_recover"] is None:
+        raise AssertionError("recovery watcher never saw kill+redispatch")
+    recovery_s = seen["t_recover"] - seen["t_kill"]
+
+    # -- flaky fabric: seeded launch/harvest failures + latency --------------
+    plan = FaultPlan(seed=7, fail_launch_p=0.12, fail_harvest_p=0.08,
+                     latency_s=0.02, latency_p=0.2)
+    svc = service(fault_plan=plan, max_retries=8)
+    reqs = _clone(base)
+    svc.submit_all(reqs)
+    t0 = time.perf_counter()
+    fstats = svc.serve(n_workers=4, timeout_s=600.0)
+    wall_flaky = time.perf_counter() - t0
+    _check(reqs, res_ref, fstats, "flaky pool")
+    if fstats["faults"] < 1 or fstats["retries"] < 1:
+        raise AssertionError(
+            f"fault plan never fired (faults={fstats['faults']}, "
+            f"retries={fstats['retries']})")
+
+    goodput_clean = n / wall_clean
+    goodput_faulty = n / wall_faulty
+    emit("faults/clean_pool", wall_clean / n,
+         f"goodput_rps={goodput_clean:.1f}")
+    emit("faults/kill_2_of_4", wall_faulty / n,
+         f"goodput_rps={goodput_faulty:.1f} recovery_s={recovery_s:.3f} "
+         f"redispatched={stats['redispatched']} identical=True")
+    emit("faults/flaky_fabric", wall_flaky / n,
+         f"faults={fstats['faults']} retries={fstats['retries']} "
+         f"identical=True")
+    return {
+        "n_requests": n, "n_workers": 4, "n_killed": 2,
+        "wall_s_clean": wall_clean, "wall_s_faulty": wall_faulty,
+        "goodput_rps_clean": goodput_clean,
+        "goodput_rps_faulty": goodput_faulty,
+        "recovery_s": recovery_s,
+        "redispatched": int(stats["redispatched"]),
+        "dead_lettered": int(stats["dead_lettered"]),
+        "flaky": {"wall_s": wall_flaky, "faults": int(fstats["faults"]),
+                  "retries": int(fstats["retries"]),
+                  "dead_lettered": int(fstats["dead_lettered"])},
+        "identical": True,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -23,7 +23,7 @@ from . import (bench_kernels_table2, bench_scaling_fig3,
                bench_vs_handcoded_fig45, bench_vs_software_fig6,
                bench_vs_naive_hls, bench_tiling, bench_bucketing,
                bench_mapping, bench_serving, bench_fill, bench_pairhmm,
-               bench_filter, bench_autotune)
+               bench_filter, bench_autotune, bench_faults)
 
 SUITES = [
     ("Table 2 (15 kernels)", bench_kernels_table2),
@@ -39,6 +39,7 @@ SUITES = [
     ("Pair-HMM (forward + genotyping)", bench_pairhmm),
     ("Filter ladder (myers vs full DP)", bench_filter),
     ("Autotune (sweep + warm boot)", bench_autotune),
+    ("Faults (chaos gate: kill 2 of 4)", bench_faults),
 ]
 
 # a headline may regress by this fraction before --compare fails

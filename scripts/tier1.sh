@@ -25,3 +25,4 @@ python -m benchmarks.run --quick --only pairhmm  # forward-oracle parity gate
 python -m benchmarks.run --quick --only filter   # myers bit-exactness gate
 python -m benchmarks.run --quick --only autotune # table round-trip + parity gate
 python scripts/lint_plans.py                     # trace-time plan lint gate
+python scripts/chaos.py --seeds 0 --requests 32  # gateway fault-tolerance gate

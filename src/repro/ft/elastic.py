@@ -29,6 +29,13 @@ def plan_mesh(n_devices: int, model_degree: int,
     all-layout reshard).  Only when fewer than ``model_degree`` devices
     survive does TP degrade by powers of two.
     """
+    if n_devices <= 0:
+        raise ValueError(
+            f"plan_mesh: n_devices must be >= 1, got {n_devices} — a fleet "
+            f"with no survivors has no mesh; stop serving instead")
+    if model_degree <= 0:
+        raise ValueError(
+            f"plan_mesh: model_degree must be >= 1, got {model_degree}")
     model = model_degree
     while model > 1 and n_devices < model:
         model //= 2

@@ -29,6 +29,7 @@ class HeartbeatMonitor:
     def __post_init__(self):
         self._last: Dict[str, float] = {}
         self._intervals: Dict[str, List[float]] = {}
+        self._median: Optional[float] = None   # cache; None = recompute
 
     def beat(self, worker: str, now: Optional[float] = None):
         now = time.time() if now is None else now
@@ -36,13 +37,30 @@ class HeartbeatMonitor:
         if prev is not None:
             self._intervals.setdefault(worker, []).append(now - prev)
             self._intervals[worker] = self._intervals[worker][-32:]
+            self._median = None
         self._last[worker] = now
 
+    def forget(self, worker: str) -> bool:
+        """Drop a departed worker's bookkeeping.
+
+        Without this, a worker that died (or was elastically replaced)
+        keeps its historical inter-beat intervals in the fleet median
+        forever, skewing straggler detection for every surviving worker.
+        Call on worker departure (the gateway does, on redispatch and on
+        thread exit).  Returns True if the worker was tracked.
+        """
+        known = self._last.pop(worker, None) is not None
+        if self._intervals.pop(worker, None) is not None:
+            self._median = None
+        return known
+
     def _median_interval(self) -> float:
-        all_iv = sorted(iv for ivs in self._intervals.values() for iv in ivs)
-        if not all_iv:
-            return self.min_interval
-        return max(all_iv[len(all_iv) // 2], self.min_interval)
+        if self._median is None:
+            all_iv = sorted(iv for ivs in self._intervals.values()
+                            for iv in ivs)
+            self._median = self.min_interval if not all_iv else \
+                max(all_iv[len(all_iv) // 2], self.min_interval)
+        return self._median
 
     def status(self, worker: str, now: Optional[float] = None) -> str:
         now = time.time() if now is None else now

@@ -1,6 +1,9 @@
 from .engine import Request, ServeSession
-from .alignment_service import (AlignFuture, AlignRequest, AlignmentService,
-                                InflightBatch, ServiceOverloaded)
+from .gateway import (Channel, DeadlineExceeded, FaultPlan, Gateway,
+                      GatewayError, GatewayTimeout, InflightBatch,
+                      InjectedFault, RetriesExhausted, ServiceOverloaded,
+                      ShedOverload, WorkerKilled, error_result)
+from .alignment_service import AlignFuture, AlignRequest, AlignmentService
 from .mapping_service import MapRequest, ReadMappingService
 from .genotyping_service import (GenotypeFuture, GenotypeRequest,
                                  GenotypingService)

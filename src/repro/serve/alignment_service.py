@@ -9,26 +9,23 @@ dispatched through the shared ``repro.runtime`` compiled-plan cache
 channels).  A 40-base query therefore pays the wavefront cost of a
 64-cell bucket, not of the service-wide maximum.
 
-Dispatch is *pipelined* the way the paper double-buffers host<->FPGA
-transfer against kernel compute (§5.3): ``submit`` returns a lightweight
-future, and the dispatcher loop (``wait``; ``drain`` is the synchronous-
-looking compat wrapper) launches batch N+1 — host-side padding and all —
-while batch N still computes on device, harvesting device results one
-batch behind via JAX async dispatch.  ``pipeline_depth=1`` restores the
-strictly synchronous launch-then-harvest order.
-
-A heartbeat-driven deadline re-dispatches batches whose worker goes quiet
-(ft.heartbeat) — the straggler story the FPGA host code never needed but
-a 1000-node deployment does.  Every request carries a generation counter:
-a batch's results only land if the request was not re-submitted since
-launch, so a late original and its re-dispatched copy can never both
-complete (``gen`` mismatch discards the stale write).
+The queue/admission/dispatch machinery lives in
+:class:`repro.serve.gateway.Gateway`; this module contributes only what
+is alignment-specific — the per-kernel :class:`~repro.serve.gateway.Channel`
+(bucketing, padding, the opt-in ``myers`` prefilter rung, plan
+resolution, result landing) and the service facade.  Everything the
+gateway provides comes with it: pipelined multi-batch dispatch
+(``pipeline_depth``), heartbeat-driven redispatch, generation counters
+against double-completion, ``max_pending`` backpressure
+(block/raise/shed), bounded retries with a dead-letter queue, deadlines,
+fault injection (``fault_plan``), the multi-worker ``serve()`` pool, and
+overload degradation to the bit-parallel edit-distance screen
+(``degrade='myers'``).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -36,10 +33,15 @@ import numpy as np
 from repro.core import batch as core_batch, kernels_zoo
 from repro.core.kernels_zoo import edit as edit_kernel
 from repro.core.traceback import moves_to_cigar, raise_if_truncated
-from repro.ft import DEAD, HeartbeatMonitor
 from repro.runtime import bucketing
-from repro.runtime import dispatch as dispatch_mod
 from repro.runtime import plan as plan_mod
+
+from . import gateway as gateway_mod
+from .gateway import (FaultPlan, Gateway, InflightBatch, ServiceOverloaded,
+                      ShedOverload)
+
+__all__ = ["AlignRequest", "AlignFuture", "AlignmentService",
+           "InflightBatch", "ServiceOverloaded"]
 
 
 @dataclasses.dataclass(eq=False)   # identity semantics: ndarray fields
@@ -51,12 +53,17 @@ class AlignRequest:
     result: Optional[dict] = None
     gen: int = 0                 # bumped on every re-submission
     waits: int = 0               # batch pops this request was passed over
+    attempts: int = 0            # failed dispatches (bounded-retry budget)
+    not_before: float = 0.0      # retry backoff gate
+    deadline: Optional[float] = None
 
 
 class AlignFuture:
     """Lightweight handle returned by ``submit``; resolving it drives the
     service's dispatcher loop (single-process: there is no background
-    thread — ``result()`` pumps ``wait`` until this request completes)."""
+    thread — ``result()`` pumps ``wait`` until this request completes).
+    A dead-lettered request resolves with the typed error dict
+    (``result()["failed"]``) instead of hanging."""
 
     __slots__ = ("req", "_svc")
 
@@ -79,23 +86,6 @@ class AlignFuture:
         return f"AlignFuture(rid={self.req.rid}, {state})"
 
 
-@dataclasses.dataclass(eq=False)   # identity semantics: held in lists
-class InflightBatch:
-    """One launched batch: device output not yet harvested.
-
-    ``gens`` snapshots each request's generation at launch; harvest only
-    writes results for requests still on that generation (a re-dispatch
-    bumps ``req.gen``, so the stale original is discarded).
-    """
-    worker: str
-    kernel: str
-    bucket: Tuple[int, int]
-    reqs: List[AlignRequest]
-    gens: List[int]
-    out: object                      # device arrays (async), None in tests
-    cancelled: bool = False
-
-
 QueueKey = Tuple[str, Tuple[int, int]]   # (kernel, (q_bucket, r_bucket))
 
 # serving-side filter ladder: one module-level screen spec so every
@@ -103,13 +93,126 @@ QueueKey = Tuple[str, Tuple[int, int]]   # (kernel, (q_bucket, r_bucket))
 _PREFILTER_SPEC = edit_kernel.edit_search()
 
 
-class ServiceOverloaded(RuntimeError):
-    """``submit`` under ``backpressure='raise'``: the in-flight budget
-    (``max_pending``) is exhausted — shed the request or retry later."""
+class _AlignChannel(gateway_mod.Channel):
+    """One kernel's channel: queue keys stay ``(kernel, bucket)`` and the
+    dispatch record keeps its historical shape."""
+
+    def __init__(self, svc: "AlignmentService", kernel: str):
+        self.svc = svc
+        self.name = kernel
+
+    def bucket_of(self, job: AlignRequest) -> Tuple[int, int]:
+        return self.svc._bucket(job)
+
+    def job_len(self, job: AlignRequest) -> int:
+        return len(job.query) + len(job.ref)
+
+    def block_for(self, bucket) -> int:
+        return self.svc.block_for(self.name, bucket)
+
+    def coalesce(self, bucket, jobs, block):
+        svc = self.svc
+        if not svc.coalesce:
+            return bucket, block, False
+        grown = svc._coalesce_batch(self.name, bucket, jobs, block)
+        if grown == bucket:
+            return bucket, block, False
+        # re-cap the pad rows at the grown bucket
+        return grown, max(len(jobs),
+                          min(block, self.block_for(grown))), True
+
+    def launch(self, bucket, reqs, block):
+        svc = self.svc
+        spec, params, sharded_fn = svc._channel(self.name)
+        qs, rs, ql, rl = svc._pad_batch(
+            reqs, bucket, spec.char_shape,
+            np.dtype(jnp.dtype(spec.char_dtype).name), block)
+        if svc._screenable(spec):
+            # ladder rung 1: rejects resolve here; only survivors
+            # (rebound into ``reqs`` so a failing main launch requeues
+            # exactly the requests still owed a result) pay the full
+            # plan below
+            reqs, qs, rs, ql, rl = svc._prefilter_batch(
+                spec, reqs, bucket, qs, rs, ql, rl, block)
+            if not reqs:
+                return [], None
+        if sharded_fn is not None:
+            out = sharded_fn(params, jnp.asarray(qs), jnp.asarray(rs),
+                             jnp.asarray(ql), jnp.asarray(rl))
+        else:
+            plan = plan_mod.get_plan(
+                spec, svc.engine_name, qs.shape[1:], rs.shape[1:],
+                batch_size=block,
+                with_traceback=svc.with_traceback and
+                spec.traceback is not None,
+                donate=True)
+            out = plan(params, jnp.asarray(qs), jnp.asarray(rs),
+                       jnp.asarray(ql), jnp.asarray(rl))
+        return reqs, out
+
+    def materialize(self, out):
+        score = np.asarray(out.score)
+        end_i = np.asarray(out.end_i)
+        end_j = np.asarray(out.end_j)
+        moves = n_moves = None
+        if getattr(out, "moves", None) is not None:
+            raise_if_truncated(out)      # never emit a corrupt path
+            moves = np.asarray(out.moves)
+            n_moves = np.asarray(out.n_moves)
+        return score, end_i, end_j, moves, n_moves
+
+    def land(self, job: AlignRequest, i: int, host) -> int:
+        score, end_i, end_j, moves, n_moves = host
+        res = {"score": float(score[i]),
+               "end": (int(end_i[i]), int(end_j[i]))}
+        if moves is not None:
+            res["cigar"] = moves_to_cigar(moves[i], int(n_moves[i]))
+        job.result = res
+        return 1
+
+    def record(self, bucket, n, coalesced):
+        return {"kernel": self.name, "bucket": bucket, "n": n,
+                "coalesced": coalesced}
+
+    # -- overload degradation: answer with the myers screen ------------------
+    @property
+    def can_degrade(self) -> bool:
+        svc = self.svc
+        if svc.degrade != "myers":
+            return False
+        spec, _, _ = svc._channel(self.name)
+        return (spec.char_shape == ()
+                and np.dtype(jnp.dtype(spec.char_dtype).name) == np.uint8)
+
+    def launch_degraded(self, bucket, reqs, block) -> None:
+        """Past the degrade watermark, answer the whole batch with the
+        bit-parallel edit-distance screen (exact distance: the threshold
+        is set beyond the bucket perimeter so it never clips).  Degraded
+        results are typed (``degraded: True``, ``score = -distance``) so
+        callers can tell an approximation from a full alignment."""
+        svc = self.svc
+        spec, _, _ = svc._channel(self.name)
+        qs, rs, ql, rl = svc._pad_batch(
+            reqs, bucket, spec.char_shape,
+            np.dtype(jnp.dtype(spec.char_dtype).name), block)
+        params = edit_kernel.default_params(bucket[0] + bucket[1])
+        screen = plan_mod.get_plan(
+            _PREFILTER_SPEC, svc.prefilter_engine,
+            qs.shape[1:], rs.shape[1:], batch_size=block,
+            with_traceback=False, mode="fill")
+        out = screen(params, jnp.asarray(qs), jnp.asarray(rs),
+                     jnp.asarray(ql), jnp.asarray(rl))
+        dist = np.asarray(out.score)[: len(reqs)]
+        for r, d in zip(reqs, dist):
+            if r.result is not None:
+                continue
+            r.result = {"score": -float(d), "edit_distance": int(d),
+                        "end": (0, 0), "degraded": True}
+            svc._job_resolved(r, 1, "degraded")
 
 
-class AlignmentService:
-    """Single-process reference implementation of the dispatch logic.
+class AlignmentService(Gateway):
+    """Alignment channels on the unified gateway.
 
     ``mesh=None`` runs un-sharded (CPU smoke); with a mesh, each kernel
     channel resolves a sharded plan over the 'data' axis — both paths go
@@ -130,15 +233,17 @@ class AlignmentService:
     ``submit`` does at the budget: ``'block'`` synchronously works one
     batch at a time off the queues until there is room (the producer is
     slowed to the service's pace), ``'raise'`` sheds the request with
-    :class:`ServiceOverloaded` (the caller owns retry policy).  The
-    budget bounds host memory *and* worst-case result latency — an
-    unbounded intake queue hides, rather than signals, an overloaded
-    service.
-    """
+    :class:`ServiceOverloaded` (the caller owns retry policy), and
+    ``'shed'`` resolves the newest request immediately with a typed
+    ``shed`` error result.  The budget bounds host memory *and*
+    worst-case result latency — an unbounded intake queue hides, rather
+    than signals, an overloaded service.
 
-    # batch pops a request may be passed over (by longest-first block
-    # formation) before it jumps to the front of its queue
-    STALE_AFTER = 4
+    The robustness knobs (``fault_plan``, ``max_retries``,
+    ``retry_backoff_s``, ``deadline_s``, ``harvest_timeout_s``,
+    ``degrade``/``degrade_watermark``) and the multi-worker ``serve()``
+    pool are inherited from :class:`~repro.serve.gateway.Gateway`.
+    """
 
     def __init__(self, max_len: int = 256, block: int = 8, mesh=None,
                  engine_name: str = "wavefront", with_traceback: bool = True,
@@ -150,15 +255,21 @@ class AlignmentService:
                  backpressure: str = "block",
                  prefilter: Optional[float] = None,
                  prefilter_engine: str = "myers",
-                 warm_start: Optional[Sequence] = None):
-        if backpressure not in ("block", "raise"):
-            raise ValueError(
-                f"backpressure must be 'block' or 'raise', got {backpressure!r}")
-        if max_pending is not None and max_pending < 1:
-            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
-        self.max_pending = max_pending
-        self.backpressure = backpressure
-        self._pending = 0
+                 warm_start: Optional[Sequence] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_retries: Optional[int] = 3,
+                 retry_backoff_s: float = 0.0,
+                 deadline_s: Optional[float] = None,
+                 harvest_timeout_s: Optional[float] = None,
+                 degrade: Optional[str] = None,
+                 degrade_watermark: Optional[int] = None):
+        Gateway.__init__(
+            self, pipeline_depth=pipeline_depth, max_pending=max_pending,
+            backpressure=backpressure, redispatch_after=redispatch_after,
+            fault_plan=fault_plan, max_retries=max_retries,
+            retry_backoff_s=retry_backoff_s, deadline_s=deadline_s,
+            harvest_timeout_s=harvest_timeout_s,
+            degrade_watermark=degrade_watermark)
         self.max_len, self.block = max_len, block
         self.tb_budget_bytes = tb_budget_bytes
         self.max_block = max_block
@@ -169,7 +280,6 @@ class AlignmentService:
         self.max_bucket = bucketing.bucket_length(
             max_len, min_bucket=self.min_bucket)
         self.coalesce = coalesce
-        self.pipeline_depth = pipeline_depth
         self.mesh = mesh
         self.engine_name = engine_name
         self.with_traceback = with_traceback
@@ -184,13 +294,11 @@ class AlignmentService:
                 f"prefilter must be a fraction in (0, 1), got {prefilter}")
         self.prefilter = prefilter
         self.prefilter_engine = prefilter_engine
-        self.queues: Dict[QueueKey, List[AlignRequest]] = {}
+        if degrade not in (None, "myers"):
+            raise ValueError(
+                f"degrade must be None or 'myers', got {degrade!r}")
+        self.degrade = degrade
         self.channels: Dict[str, tuple] = {}   # kernel -> (spec, params, fn)
-        self.monitor = HeartbeatMonitor(dead_after=redispatch_after)
-        self.inflight: Dict[str, List[InflightBatch]] = {}
-        # per-batch shape telemetry, bounded so a long-lived service
-        # doesn't accumulate host memory
-        self.dispatches = collections.deque(maxlen=4096)
         # AOT warm boot: pre-compile the declared channel grid so the
         # first request at each (kernel, bucket) lands on a hot plan
         if warm_start:
@@ -279,58 +387,51 @@ class AlignmentService:
     def _channel(self, kernel: str):
         """Per-kernel spec/params (+ sharded aligner when on a mesh)."""
         if kernel not in self.channels:
-            spec, params = kernels_zoo.make(kernel)
-            fn = None
-            if self.mesh is not None:
-                fn = core_batch.make_sharded_aligner(
-                    spec, self.mesh, engine_name=self.engine_name,
-                    with_traceback=self.with_traceback and
-                    spec.traceback is not None)
-            self.channels[kernel] = (spec, params, fn)
+            with self._lock:
+                if kernel not in self.channels:
+                    spec, params = kernels_zoo.make(kernel)
+                    fn = None
+                    if self.mesh is not None:
+                        fn = core_batch.make_sharded_aligner(
+                            spec, self.mesh, engine_name=self.engine_name,
+                            with_traceback=self.with_traceback and
+                            spec.traceback is not None)
+                    self.channels[kernel] = (spec, params, fn)
         return self.channels[kernel]
+
+    def _resolve_channel(self, name: str) -> _AlignChannel:
+        ch = self._gw_channels.get(name)
+        if ch is None:
+            with self._lock:
+                ch = self._gw_channels.get(name)
+                if ch is None:
+                    ch = self.register_channel(_AlignChannel(self, name))
+        return ch
 
     # -- intake ------------------------------------------------------------
     def _enqueue(self, req: AlignRequest) -> None:
-        key = (req.kernel, self._bucket(req))
-        self.queues.setdefault(key, []).append(req)
+        with self._lock:
+            self._push(self._resolve_channel(req.kernel), req)
 
     def submit(self, req: AlignRequest) -> AlignFuture:
         if len(req.query) > self.max_len or len(req.ref) > self.max_len:
             raise ValueError(
                 f"request {req.rid}: lengths ({len(req.query)}, "
                 f"{len(req.ref)}) exceed max_len {self.max_len}")
-        self._admit(req.rid)
-        self._pending += 1
-        self._enqueue(req)
+        if not self._admit(req.rid):
+            with self._lock:     # shed: resolve newest with a typed error
+                self._dead_letter(
+                    self._resolve_channel(req.kernel), req,
+                    ShedOverload(
+                        f"request {req.rid}: {self._pending} requests "
+                        f"pending >= max_pending {self.max_pending}"),
+                    free_pending=False)
+            return AlignFuture(req, self)
+        self._stamp_deadline(req)
+        with self._lock:
+            self._pending += 1
+            self._push(self._resolve_channel(req.kernel), req)
         return AlignFuture(req, self)
-
-    def _admit(self, rid) -> None:
-        """Backpressure gate: make room under ``max_pending`` or shed."""
-        if self.max_pending is None or self._pending < self.max_pending:
-            return
-        if self.backpressure == "raise":
-            raise ServiceOverloaded(
-                f"request {rid}: {self._pending} requests pending >= "
-                f"max_pending {self.max_pending}")
-        # block: work batches off the queues synchronously until there is
-        # room.  Outside wait() nothing is in flight, so queued work is
-        # the entire backlog; stop only when the queues are empty (a
-        # batch may legitimately complete zero requests — stale gens),
-        # so submit can never spin on an idle service.
-        while self._pending >= self.max_pending:
-            if self._step() is None:
-                break
-
-    def _step(self, worker: str = "w0") -> Optional[int]:
-        """Launch + harvest one batch synchronously; #completed, or
-        ``None`` when every queue is empty."""
-        item = self._next_batch()
-        if item is None:
-            return None
-        return self._harvest(item, self._launch(worker, item))
-
-    def submit_all(self, reqs: Sequence[AlignRequest]) -> List[AlignFuture]:
-        return [self.submit(r) for r in reqs]
 
     # -- batch formation ---------------------------------------------------
     def _pad_batch(self, reqs: List[AlignRequest], bucket: Tuple[int, int],
@@ -382,41 +483,6 @@ class AlignmentService:
                 break
         return out_bucket
 
-    def _next_batch(self):
-        """Pop the next (kernel, bucket, reqs, coalesced, rows) batch,
-        smallest bucket first, or None when every queue is empty."""
-        pending = [(k, b) for (k, b) in sorted(
-            self.queues, key=lambda kb: (kb[0], kb[1][0] * kb[1][1]))
-            if self.queues[(k, b)]]
-        if not pending:
-            return None
-        kernel, bucket = pending[0]
-        block = self.block_for(kernel, bucket)
-        queue = self.queues[(kernel, bucket)]
-        # longest-first within a bounded arrival window: blocks come out
-        # length-homogeneous (the engine's early-exit fill stops at the
-        # *block max* wavefront).  A passed-over counter guarantees
-        # progress under sustained arrivals: a request out-sorted
-        # STALE_AFTER times jumps to the front regardless of length, so
-        # no future can be starved by a stream of longer requests.
-        w = min(len(queue), 4 * block)
-        queue[:w] = sorted(
-            queue[:w],
-            key=lambda r: (r.waits < self.STALE_AFTER,
-                           -(len(r.query) + len(r.ref))))
-        reqs = [queue.pop(0) for _ in range(min(block, len(queue)))]
-        for r in queue[:w - len(reqs)]:
-            r.waits += 1
-        coalesced = False
-        if self.coalesce and not queue and len(reqs) < block:
-            out_bucket = self._coalesce_batch(kernel, bucket, reqs, block)
-            coalesced = out_bucket != bucket
-            bucket = out_bucket
-            if coalesced:   # re-cap the pad rows at the grown bucket
-                block = max(len(reqs),
-                            min(block, self.block_for(kernel, bucket)))
-        return kernel, bucket, reqs, coalesced, block
-
     # -- the prefilter rung ------------------------------------------------
     def _screenable(self, spec) -> bool:
         """The edit screen only reads uint8 scalar symbol codes; channels
@@ -447,170 +513,9 @@ class AlignmentService:
                 survivors.append(r)
             else:
                 r.result = {"score": sent, "end": (0, 0), "filtered": True}
-                self._pending -= 1
+                self._job_resolved(r, 1, "filtered")
         if len(survivors) != len(reqs):
             qs, rs, ql, rl = self._pad_batch(survivors, bucket,
                                              spec.char_shape, qs.dtype,
                                              block)
         return survivors, qs, rs, ql, rl
-
-    # -- launch / harvest (the two pipeline stages) ------------------------
-    def _launch(self, worker: str, item) -> InflightBatch:
-        """Pad one batch and enqueue it on the device (non-blocking under
-        JAX async dispatch).  On failure the popped requests go straight
-        back to their queues — a raising plan must never lose work."""
-        kernel, bucket, reqs, coalesced, block = item
-        self.monitor.beat(worker)
-        try:
-            spec, params, sharded_fn = self._channel(kernel)
-            qs, rs, ql, rl = self._pad_batch(
-                reqs, bucket, spec.char_shape,
-                np.dtype(jnp.dtype(spec.char_dtype).name), block)
-            if self._screenable(spec):
-                # ladder rung 1: rejects resolve here; only survivors
-                # (rebound into ``reqs`` so a failing main launch
-                # requeues exactly the requests still owed a result)
-                # pay the full plan below
-                reqs, qs, rs, ql, rl = self._prefilter_batch(
-                    spec, reqs, bucket, qs, rs, ql, rl, block)
-                if not reqs:
-                    ib = InflightBatch(worker=worker, kernel=kernel,
-                                       bucket=bucket, reqs=[], gens=[],
-                                       out=None, cancelled=True)
-                    self.inflight.setdefault(worker, []).append(ib)
-                    self.dispatches.append({"kernel": kernel,
-                                            "bucket": bucket, "n": 0,
-                                            "coalesced": coalesced})
-                    return ib
-            if sharded_fn is not None:
-                out = sharded_fn(params, jnp.asarray(qs), jnp.asarray(rs),
-                                 jnp.asarray(ql), jnp.asarray(rl))
-            else:
-                plan = plan_mod.get_plan(
-                    spec, self.engine_name, qs.shape[1:], rs.shape[1:],
-                    batch_size=block,
-                    with_traceback=self.with_traceback and
-                    spec.traceback is not None,
-                    donate=True)
-                out = plan(params, jnp.asarray(qs), jnp.asarray(rs),
-                           jnp.asarray(ql), jnp.asarray(rl))
-        except BaseException:
-            for r in reqs:
-                r.gen += 1
-                self._enqueue(r)
-            raise
-        ib = InflightBatch(worker=worker, kernel=kernel, bucket=bucket,
-                           reqs=reqs, gens=[r.gen for r in reqs], out=out)
-        self.inflight.setdefault(worker, []).append(ib)
-        self.dispatches.append({"kernel": kernel, "bucket": bucket,
-                                "n": len(reqs), "coalesced": coalesced})
-        return ib
-
-    def _harvest(self, item, ib: InflightBatch) -> int:
-        """Block on one launched batch and land its results.
-
-        Stale writes are discarded: a request re-submitted since launch
-        (``gen`` mismatch, e.g. via ``redispatch_dead``) or already
-        completed keeps its authoritative result.  On failure the still-
-        incomplete requests are requeued; the batch always leaves
-        ``inflight``.
-        """
-        done = 0
-        try:
-            if not ib.cancelled:
-                out = ib.out
-                score = np.asarray(out.score)       # sync point: blocks
-                end_i = np.asarray(out.end_i)
-                end_j = np.asarray(out.end_j)
-                moves = n_moves = None
-                if getattr(out, "moves", None) is not None:
-                    raise_if_truncated(out)  # never emit a corrupt path
-                    moves = np.asarray(out.moves)
-                    n_moves = np.asarray(out.n_moves)
-                for i, (r, gen) in enumerate(zip(ib.reqs, ib.gens)):
-                    if r.gen != gen or r.result is not None:
-                        continue                     # stale or double write
-                    res = {"score": float(score[i]),
-                           "end": (int(end_i[i]), int(end_j[i]))}
-                    if moves is not None:
-                        res["cigar"] = moves_to_cigar(moves[i],
-                                                      int(n_moves[i]))
-                    r.result = res
-                    done += 1
-                    self._pending -= 1
-        except BaseException:
-            self._requeue_incomplete(ib)
-            raise
-        finally:
-            self._forget(ib)
-            self.monitor.beat(ib.worker)
-        return done
-
-    def _requeue_incomplete(self, ib: InflightBatch) -> int:
-        """Put a batch's unfinished requests back on their queues with a
-        bumped generation (so any late device result is discarded)."""
-        ib.cancelled = True
-        n = 0
-        for r, gen in zip(ib.reqs, ib.gens):
-            if r.result is not None or r.gen != gen:
-                continue
-            r.gen += 1
-            self._enqueue(r)
-            n += 1
-        return n
-
-    # -- the dispatcher loop -----------------------------------------------
-    def wait(self, futures: Optional[Sequence[AlignFuture]] = None,
-             worker: str = "w0") -> int:
-        """Run the pipelined dispatcher until ``futures`` resolve (or, with
-        ``futures=None``, until every queue is empty).  Returns #completed.
-
-        Host padding of batch N+1 overlaps device compute of batch N
-        (``runtime.dispatch.run_pipelined``); heartbeats fire at every
-        launch and harvest, so a worker wedged inside a device sync goes
-        quiet and ``redispatch_dead`` can reclaim its batches.
-        """
-        def batches() -> Iterator:
-            while True:
-                if futures is not None and all(f.done() for f in futures):
-                    return
-                item = self._next_batch()
-                if item is None:
-                    return
-                yield item
-
-        return dispatch_mod.run_pipelined(
-            batches(),
-            lambda item: self._launch(worker, item),
-            self._harvest,
-            depth=self.pipeline_depth,
-            on_abandon=lambda item, ib: (self._requeue_incomplete(ib),
-                                         self._forget(ib)))
-
-    def _forget(self, ib: InflightBatch) -> None:
-        batches = self.inflight.get(ib.worker, [])
-        if ib in batches:
-            batches.remove(ib)
-        if not batches:
-            self.inflight.pop(ib.worker, None)
-
-    def drain(self, worker: str = "w0") -> int:
-        """Compat wrapper: submit_all has happened via ``submit``; process
-        everything queued and return #completed."""
-        return self.wait(worker=worker)
-
-    def redispatch_dead(self, now: Optional[float] = None) -> int:
-        """Requeue in-flight batches whose worker stopped beating.
-
-        Requeued requests get a new generation, so if the original batch
-        does eventually finish, its harvest is discarded — exactly one
-        result per request ever lands.
-        """
-        n = 0
-        for worker in list(self.inflight):
-            # status() is DEAD both for tracked workers past the deadline
-            # and for workers that never beat at all
-            if self.monitor.status(worker, now) == DEAD:
-                for ib in self.inflight.pop(worker, []):
-                    n += self._requeue_incomplete(ib)
-        return n

@@ -6,23 +6,27 @@ N*H forward likelihoods are the evidence for one genotype call.  The
 service flattens every submitted site into pair jobs, queues them per
 length bucket (exactly the align channels' shape discipline — one
 score-only sum-semiring CompiledPlan per bucket, shared service-wide),
-and drives launch/harvest through the same
-``runtime.dispatch.run_pipelined`` dispatcher: host padding of batch
-N+1 overlaps the device computing batch N.  A site's call lands the
-moment its last pair harvests (sites therefore complete out of
-submission order under mixed lengths — the future, not the queue,
-carries the ordering contract).
+and drives launch/harvest through the shared
+:class:`repro.serve.gateway.Gateway` dispatcher: host padding of batch
+N+1 overlaps the device computing batch N, and the gateway's
+fault-tolerance contract (heartbeat redispatch, generation counters,
+bounded retries, deadlines, dead letters, multi-worker ``serve()``)
+comes with it.  A site's call lands the moment its last pair harvests
+(sites therefore complete out of submission order under mixed lengths —
+the future, not the queue, carries the ordering contract); a site that
+exhausts its retries or deadline resolves with one typed error result
+and its remaining pair jobs are dropped from the queues.
 
 Backpressure mirrors ``AlignmentService``: ``max_pending`` bounds
 incomplete *sites*, ``backpressure='block'`` makes ``submit`` work
 batches synchronously until there is room, ``'raise'`` sheds with
-``ServiceOverloaded``.
+``ServiceOverloaded``, ``'shed'`` resolves the newest site with a typed
+``shed`` error result.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -30,10 +34,13 @@ import numpy as np
 from repro.prob import genotype as genotype_mod
 from repro.prob import kernels as prob_kernels
 from repro.runtime import bucketing
-from repro.runtime import dispatch as dispatch_mod
 from repro.runtime import plan as plan_mod
 
-from .alignment_service import ServiceOverloaded
+from . import gateway as gateway_mod
+from .gateway import (FaultPlan, Gateway, ServiceOverloaded, ShedOverload,
+                      error_result)
+
+__all__ = ["GenotypeRequest", "GenotypeFuture", "GenotypingService"]
 
 
 @dataclasses.dataclass(eq=False)   # identity semantics: ndarray fields
@@ -44,6 +51,7 @@ class GenotypeRequest:
     haplotypes: List[np.ndarray]
     ploidy: int = 2
     result: Optional[dict] = None    # genotype.call_genotype dict + "ll"
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -55,13 +63,9 @@ class _PairJob:
     query: np.ndarray
     ref: np.ndarray
     waits: int = 0                   # batch pops this job was passed over
-
-
-@dataclasses.dataclass(eq=False)
-class _InflightBlock:
-    bucket: Tuple[int, int]
-    jobs: List[_PairJob]
-    out: object                      # device Alignment batch (async)
+    gen: int = 0                     # bumped on every re-dispatch
+    attempts: int = 0                # failed dispatches
+    not_before: float = 0.0          # retry backoff gate
 
 
 class GenotypeFuture:
@@ -90,15 +94,110 @@ class GenotypeFuture:
         return f"GenotypeFuture(rid={self.req.rid}, {state})"
 
 
-class GenotypingService:
-    """Single-process genotyping channel on the shared runtime.
+class _PairHMMChannel(gateway_mod.Channel):
+    """The single forward-likelihood channel; queue keys are bare bucket
+    tuples (the historical layout) and the *site*, not the pair job, is
+    the pending/dead-letter unit."""
+
+    name = "pairhmm"
+
+    def __init__(self, svc: "GenotypingService"):
+        self.svc = svc
+
+    def queue_key(self, bucket):
+        return bucket
+
+    def bucket_of(self, job: _PairJob) -> Tuple[int, int]:
+        svc = self.svc
+        return bucketing.bucket_shape(
+            len(job.query), len(job.ref),
+            min_bucket=svc.min_bucket, max_bucket=svc.max_bucket)
+
+    def job_len(self, job: _PairJob) -> int:
+        return len(job.query) + len(job.ref)
+
+    def job_rid(self, job: _PairJob):
+        return job.req.rid
+
+    def job_done(self, job: _PairJob) -> bool:
+        # a pair cell is done when its likelihood landed; the whole job
+        # is moot once the site carries a result (called, or dead-
+        # lettered: remaining cells must not occupy batch slots)
+        return (job.req.result is not None
+                or not np.isnan(job.req._ll[job.read_idx, job.hap_idx]))
+
+    def deadline_of(self, job: _PairJob) -> Optional[float]:
+        return job.req.deadline
+
+    def block_for(self, bucket) -> int:
+        return self.svc.block
+
+    def launch(self, bucket, jobs, block):
+        svc = self.svc
+        Lq, Lr = bucket
+        qs = np.zeros((block, Lq), np.uint8)
+        rs = np.zeros((block, Lr), np.uint8)
+        ql = np.ones((block,), np.int32)
+        rl = np.ones((block,), np.int32)
+        for i, job in enumerate(jobs):
+            ql[i], rl[i] = len(job.query), len(job.ref)
+            qs[i, : ql[i]] = job.query
+            rs[i, : rl[i]] = job.ref
+        plan = plan_mod.get_plan(svc.spec, svc.engine_name,
+                                 (Lq,), (Lr,), batch_size=block,
+                                 with_traceback=False, donate=True)
+        out = plan(svc.params, jnp.asarray(qs), jnp.asarray(rs),
+                   jnp.asarray(ql), jnp.asarray(rl))
+        return jobs, out
+
+    def materialize(self, out):
+        return np.asarray(out.score)             # sync point
+
+    def land(self, job: _PairJob, i: int, scores) -> int:
+        """Write one likelihood cell; finalize the site when its matrix
+        just filled.  Returns 1 only on site completion (the pending
+        unit is the site)."""
+        svc = self.svc
+        req = job.req
+        ll = float(scores[i])
+        if svc.hap_norm:
+            ll -= float(np.log(len(job.ref)))
+        req._ll[job.read_idx, job.hap_idx] = ll
+        req._left -= 1
+        if req._left == 0 and req.result is None:
+            req.result = genotype_mod.call_genotype(req._ll, req.ploidy)
+            req.result["ll"] = req._ll
+            return 1
+        return 0
+
+    def fail(self, job: _PairJob, exc: BaseException) -> int:
+        """A pair job's terminal failure fails its whole site (one typed
+        result); sibling cells already queued are dropped at the next
+        batch formation via ``job_done``."""
+        req = job.req
+        if req.result is not None:
+            return 0
+        req.result = error_result(exc)
+        return 1
+
+    def record(self, bucket, n, coalesced):
+        return {"bucket": bucket, "n": n}
+
+
+class GenotypingService(Gateway):
+    """The genotyping channel on the unified gateway.
 
     ``max_len`` caps read and haplotype lengths (snapped up to the
     bucket grid like the align channels); ``block`` is the pair-batch
     row count; ``pipeline_depth`` how many blocks may be in flight.
     ``hap_norm`` applies the per-haplotype ``-log(len)`` free-start
-    normalization (see ``prob.genotype``).
+    normalization (see ``prob.genotype``).  Fault tolerance
+    (``fault_plan``, ``max_retries``, ``retry_backoff_s``,
+    ``deadline_s``, ``harvest_timeout_s``) and the multi-worker
+    ``serve()`` pool come from :class:`~repro.serve.gateway.Gateway`.
     """
+
+    _unit = ("site", "sites")
 
     def __init__(self, max_len: int = 512, block: int = 8,
                  engine_name: str = "wavefront", params=None,
@@ -107,29 +206,30 @@ class GenotypingService:
                  hap_norm: bool = True,
                  max_pending: Optional[int] = None,
                  backpressure: str = "block",
-                 warm_start: Optional[Sequence[Tuple[int, int]]] = None):
-        if backpressure not in ("block", "raise"):
-            raise ValueError(
-                f"backpressure must be 'block' or 'raise', got {backpressure!r}")
-        if max_pending is not None and max_pending < 1:
-            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+                 warm_start: Optional[Sequence[Tuple[int, int]]] = None,
+                 redispatch_after: float = 60.0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_retries: Optional[int] = 3,
+                 retry_backoff_s: float = 0.0,
+                 deadline_s: Optional[float] = None,
+                 harvest_timeout_s: Optional[float] = None):
+        Gateway.__init__(
+            self, pipeline_depth=pipeline_depth, max_pending=max_pending,
+            backpressure=backpressure, redispatch_after=redispatch_after,
+            fault_plan=fault_plan, max_retries=max_retries,
+            retry_backoff_s=retry_backoff_s, deadline_s=deadline_s,
+            harvest_timeout_s=harvest_timeout_s)
         self.max_len = max_len
         self.block = block
         self.engine_name = engine_name
-        self.pipeline_depth = pipeline_depth
         self.min_bucket = min(min_bucket, max_len)
         self.max_bucket = bucketing.bucket_length(
             max_len, min_bucket=self.min_bucket)
         self.hap_norm = hap_norm
-        self.max_pending = max_pending
-        self.backpressure = backpressure
         self.spec = prob_kernels.cached_pairhmm()
         self.params = prob_kernels.default_params() if params is None \
             else params
-        self.queues: Dict[Tuple[int, int], List[_PairJob]] = {}
-        self.inflight: List[_InflightBlock] = []
-        self._pending = 0            # incomplete sites
-        self.dispatches = collections.deque(maxlen=4096)
+        self._ch = self.register_channel(_PairHMMChannel(self))
         if warm_start:
             self.warm(warm_start)
 
@@ -165,154 +265,23 @@ class GenotypingService:
                     raise ValueError(
                         f"site {req.rid}: {kind} length {len(a)} outside "
                         f"[1, {self.max_len}]")
-        self._admit(req.rid)
+        if not self._admit(req.rid):
+            with self._lock:     # shed: resolve newest with a typed error
+                exc = ShedOverload(
+                    f"site {req.rid}: {self._pending} sites pending >= "
+                    f"max_pending {self.max_pending}")
+                req.result = error_result(exc)
+                self._record_dead_letter(self._ch.name, req.rid, exc)
+            return GenotypeFuture(req, self)
         req.reads, req.haplotypes = reads, haps
         req._ll = np.full((len(reads), len(haps)), np.nan)   # type: ignore
         req._left = len(reads) * len(haps)                   # type: ignore
-        self._pending += 1
-        for ri, read in enumerate(reads):
-            for hi, hap in enumerate(haps):
-                self._enqueue(_PairJob(req=req, read_idx=ri, hap_idx=hi,
-                                       query=read, ref=hap))
+        self._stamp_deadline(req)
+        with self._lock:
+            self._pending += 1
+            for ri, read in enumerate(reads):
+                for hi, hap in enumerate(haps):
+                    self._push(self._ch, _PairJob(
+                        req=req, read_idx=ri, hap_idx=hi,
+                        query=read, ref=hap))
         return GenotypeFuture(req, self)
-
-    def submit_all(self, reqs: Sequence[GenotypeRequest]
-                   ) -> List[GenotypeFuture]:
-        return [self.submit(r) for r in reqs]
-
-    def _enqueue(self, job: _PairJob) -> None:
-        bucket = bucketing.bucket_shape(
-            len(job.query), len(job.ref),
-            min_bucket=self.min_bucket, max_bucket=self.max_bucket)
-        self.queues.setdefault(bucket, []).append(job)
-
-    def _admit(self, rid) -> None:
-        if self.max_pending is None or self._pending < self.max_pending:
-            return
-        if self.backpressure == "raise":
-            raise ServiceOverloaded(
-                f"site {rid}: {self._pending} sites pending >= "
-                f"max_pending {self.max_pending}")
-        while self._pending >= self.max_pending:
-            if self._step() is None:
-                break
-
-    # -- batch formation / launch / harvest --------------------------------
-    # batch pops a job may be passed over (by longest-first block
-    # formation) before it jumps to the front of its queue — the same
-    # anti-starvation guard as AlignmentService.STALE_AFTER
-    STALE_AFTER = 4
-
-    def _next_batch(self):
-        """Pop up to ``block`` jobs of one bucket, longest-first within
-        a bounded arrival window so the engine's shared early-exit bound
-        stays tight; a job out-sorted ``STALE_AFTER`` times jumps to the
-        front regardless of length, so no site can be starved by a
-        stream of longer pairs."""
-        pending = sorted((b for b, q in self.queues.items() if q),
-                         key=lambda b: b[0] * b[1])
-        if not pending:
-            return None
-        bucket = pending[0]
-        queue = self.queues[bucket]
-        w = min(len(queue), 4 * self.block)
-        queue[:w] = sorted(
-            queue[:w], key=lambda j: (j.waits < self.STALE_AFTER,
-                                      -(len(j.query) + len(j.ref))))
-        jobs = [queue.pop(0) for _ in range(min(self.block, len(queue)))]
-        for j in queue[: w - len(jobs)]:
-            j.waits += 1
-        return bucket, jobs
-
-    def _launch(self, item) -> _InflightBlock:
-        """Pad one block and enqueue it (non-blocking under JAX async
-        dispatch); a raising plan requeues the popped jobs."""
-        bucket, jobs = item
-        try:
-            Lq, Lr = bucket
-            n = self.block
-            qs = np.zeros((n, Lq), np.uint8)
-            rs = np.zeros((n, Lr), np.uint8)
-            ql = np.ones((n,), np.int32)
-            rl = np.ones((n,), np.int32)
-            for i, job in enumerate(jobs):
-                ql[i], rl[i] = len(job.query), len(job.ref)
-                qs[i, : ql[i]] = job.query
-                rs[i, : rl[i]] = job.ref
-            plan = plan_mod.get_plan(self.spec, self.engine_name,
-                                     (Lq,), (Lr,), batch_size=n,
-                                     with_traceback=False, donate=True)
-            out = plan(self.params, jnp.asarray(qs), jnp.asarray(rs),
-                       jnp.asarray(ql), jnp.asarray(rl))
-        except BaseException:
-            for job in jobs:
-                self._enqueue(job)
-            raise
-        ib = _InflightBlock(bucket=bucket, jobs=jobs, out=out)
-        self.inflight.append(ib)
-        self.dispatches.append({"bucket": bucket, "n": len(jobs)})
-        return ib
-
-    def _harvest(self, item, ib: _InflightBlock) -> int:
-        """Block on one launched block; land scores, finalize any site
-        whose matrix just filled.  Returns #sites completed."""
-        done = 0
-        try:
-            scores = np.asarray(ib.out.score)        # sync point
-            for i, job in enumerate(ib.jobs):
-                req = job.req
-                ll = float(scores[i])
-                if self.hap_norm:
-                    ll -= float(np.log(len(job.ref)))
-                req._ll[job.read_idx, job.hap_idx] = ll
-                req._left -= 1
-                if req._left == 0:
-                    req.result = genotype_mod.call_genotype(
-                        req._ll, req.ploidy)
-                    req.result["ll"] = req._ll
-                    self._pending -= 1
-                    done += 1
-        except BaseException:
-            for job in ib.jobs:                      # requeue: no loss
-                if np.isnan(job.req._ll[job.read_idx, job.hap_idx]):
-                    self._enqueue(job)
-            raise
-        finally:
-            if ib in self.inflight:
-                self.inflight.remove(ib)
-        return done
-
-    # -- the dispatcher loop -----------------------------------------------
-    def _step(self) -> Optional[int]:
-        """One synchronous launch+harvest; ``None`` on empty queues."""
-        item = self._next_batch()
-        if item is None:
-            return None
-        return self._harvest(item, self._launch(item))
-
-    def wait(self, futures: Optional[Sequence[GenotypeFuture]] = None) -> int:
-        """Run the pipelined dispatcher until ``futures`` resolve (or the
-        queues drain).  Returns #sites completed."""
-        def batches() -> Iterator:
-            while True:
-                if futures is not None and all(f.done() for f in futures):
-                    return
-                item = self._next_batch()
-                if item is None:
-                    return
-                yield item
-
-        def abandon(item, ib):
-            for job in ib.jobs:
-                if np.isnan(job.req._ll[job.read_idx, job.hap_idx]):
-                    self._enqueue(job)
-            if ib in self.inflight:
-                self.inflight.remove(ib)
-
-        return dispatch_mod.run_pipelined(
-            batches(), self._launch, self._harvest,
-            depth=self.pipeline_depth, on_abandon=abandon)
-
-    def drain(self) -> int:
-        """Process everything queued; returns #sites completed."""
-        return self.wait()

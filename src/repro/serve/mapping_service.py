@@ -4,17 +4,23 @@ Where ``AlignmentService`` serves pre-paired (query, ref) requests, this
 channel serves *reads only*: a ``ReadMapper`` owns the reference index
 and every drained batch runs the full seed-chain-extend pipeline, whose
 extension stage lands on the same shared CompiledPlan cache — and the
-same ``runtime.dispatch.run_pipelined`` overlap — as the align channels.
-``drain`` hands the whole queue (up to ``max_batch``) to one
-``map_reads`` call instead of chopping it into tiny chunks, so the
-extension stage sees enough bucketed blocks to keep the device busy
-while the host pads and post-processes.  Results attach to the submitted
-request objects (same contract as ``AlignRequest``), so callers keep
-their own ordering.
+same pipelined dispatcher — as the align channels.  ``drain`` hands the
+whole queue (up to ``max_batch``) to one ``map_reads`` call instead of
+chopping it into tiny chunks, so the extension stage sees enough
+bucketed blocks to keep the device busy while the host pads and
+post-processes.  Results attach to the submitted request objects (same
+contract as ``AlignRequest``), so callers keep their own ordering.
+
+The queue lives on the shared :class:`repro.serve.gateway.Gateway` as a
+single FIFO channel (``map_reads`` is order-preserving: a failing batch
+goes back to the *front* of the queue in its original order), which buys
+the gateway's fault-tolerance contract — bounded retries, dead letters,
+deadlines, fault injection, multi-worker ``serve()`` — for free.
+``map_reads`` itself is synchronous, so the channel pins
+``pipeline_depth=1``.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 from typing import List, Optional
 
@@ -22,16 +28,69 @@ import numpy as np
 
 from repro.mapping import ReadMapper
 
+from . import gateway as gateway_mod
+from .gateway import FaultPlan, Gateway, ShedOverload
+
+__all__ = ["MapRequest", "ReadMappingService"]
+
 
 @dataclasses.dataclass(eq=False)   # identity semantics: ndarray field
 class MapRequest:
     rid: int
     read: np.ndarray                 # uint8 DNA codes, as sequenced
     result: Optional[dict] = None    # {flag,pos,mapq,cigar,score,...}
+    gen: int = 0                     # bumped on every re-dispatch
+    waits: int = 0                   # batch pops passed over (FIFO: unused)
+    attempts: int = 0                # failed dispatches
+    not_before: float = 0.0          # retry backoff gate
+    deadline: Optional[float] = None
 
 
-class ReadMappingService:
-    """Single-process reference implementation of the map_reads channel.
+class _MapReadsChannel(gateway_mod.Channel):
+    """One FIFO pseudo-bucket over the whole read queue."""
+
+    name = "map_reads"
+    requeue_front = True             # keep submission order on requeue
+
+    def __init__(self, svc: "ReadMappingService"):
+        self.svc = svc
+
+    def queue_key(self, bucket):
+        return "reads"
+
+    def bucket_of(self, job: MapRequest):
+        return (1, 1)                # single pseudo-bucket: FIFO channel
+
+    def block_for(self, bucket) -> int:
+        svc = self.svc
+        if svc.max_batch is None:
+            return max(1, len(svc.queue))
+        return svc.max_batch
+
+    def launch(self, bucket, reqs, block):
+        # map_reads is synchronous (seed-chain-extend incl. host post-
+        # processing); the gateway runs this channel at depth 1
+        records = self.svc.mapper.map_reads(
+            [r.read for r in reqs],
+            names=[f"r{r.rid}" for r in reqs])
+        return reqs, records
+
+    def land(self, job: MapRequest, i: int, records) -> int:
+        rec = records[i]
+        job.result = {
+            "flag": rec.flag, "pos": rec.pos, "mapq": rec.mapq,
+            "cigar": rec.cigar, "score": rec.score,
+            "chain_score": rec.chain_score,
+            "mapped": rec.is_mapped, "sam": rec.to_line(),
+        }
+        return 1
+
+    def record(self, bucket, n, coalesced):
+        return {"n": n}
+
+
+class ReadMappingService(Gateway):
+    """The map_reads channel on the unified gateway.
 
     ``block`` is the mapper's internal batch row count (ignored when an
     explicit ``mapper`` is passed); ``max_batch`` caps how many queued
@@ -43,14 +102,31 @@ class ReadMappingService:
     def __init__(self, ref, block: int = 16,
                  mapper: Optional[ReadMapper] = None,
                  max_batch: Optional[int] = 256,
-                 warm_start: Optional[List] = None, **mapper_kw):
+                 warm_start: Optional[List] = None,
+                 max_pending: Optional[int] = None,
+                 backpressure: str = "block",
+                 redispatch_after: float = 60.0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_retries: Optional[int] = 3,
+                 retry_backoff_s: float = 0.0,
+                 deadline_s: Optional[float] = None, **mapper_kw):
+        Gateway.__init__(
+            self, pipeline_depth=1, max_pending=max_pending,
+            backpressure=backpressure, redispatch_after=redispatch_after,
+            fault_plan=fault_plan, max_retries=max_retries,
+            retry_backoff_s=retry_backoff_s, deadline_s=deadline_s)
         self.mapper = mapper if mapper is not None else ReadMapper(
             ref, block=block, **mapper_kw)
         self.max_batch = max_batch
-        self.queue: List[MapRequest] = []
-        self.dispatches = collections.deque(maxlen=4096)
+        self._ch = self.register_channel(_MapReadsChannel(self))
+        self._qkey = self._register_key(self._ch, (1, 1))
         if warm_start:
             self.warm(warm_start)
+
+    @property
+    def queue(self) -> List[MapRequest]:
+        """The FIFO intake queue (compat view onto the gateway queue)."""
+        return self.queues[self._qkey]
 
     def warm(self, entries: List) -> int:
         """Pre-compile the extension plans for ``(read_bucket,
@@ -84,35 +160,17 @@ class ReadMappingService:
                 n += 1
         return n
 
-    def submit(self, req: MapRequest):
-        self.queue.append(req)
-
-    def drain(self) -> int:
-        """Map all queued reads; returns #done.
-
-        A failing ``map_reads`` puts the popped requests back at the
-        front of the queue before re-raising — a raising pipeline must
-        never lose work (same contract as ``AlignmentService``).
-        """
-        done = 0
-        while self.queue:
-            take = len(self.queue) if self.max_batch is None else \
-                min(self.max_batch, len(self.queue))
-            reqs = [self.queue.pop(0) for _ in range(take)]
-            try:
-                records = self.mapper.map_reads(
-                    [r.read for r in reqs],
-                    names=[f"r{r.rid}" for r in reqs])
-            except BaseException:
-                self.queue[:0] = reqs
-                raise
-            self.dispatches.append({"n": len(reqs)})
-            for req, rec in zip(reqs, records):
-                req.result = {
-                    "flag": rec.flag, "pos": rec.pos, "mapq": rec.mapq,
-                    "cigar": rec.cigar, "score": rec.score,
-                    "chain_score": rec.chain_score,
-                    "mapped": rec.is_mapped, "sam": rec.to_line(),
-                }
-            done += len(reqs)
-        return done
+    def submit(self, req: MapRequest) -> None:
+        if not self._admit(req.rid):
+            with self._lock:     # shed: resolve newest with a typed error
+                self._dead_letter(
+                    self._ch, req,
+                    ShedOverload(
+                        f"request {req.rid}: {self._pending} requests "
+                        f"pending >= max_pending {self.max_pending}"),
+                    free_pending=False)
+            return
+        self._stamp_deadline(req)
+        with self._lock:
+            self._pending += 1
+            self.queues[self._qkey].append(req)

@@ -1,0 +1,103 @@
+"""``run_pipelined`` failure-path contracts.
+
+Pre-gateway these were asserted only implicitly through service tests;
+the gateway's recovery logic (and every channel's) leans on three exact
+behaviors: the abandon ordering of the un-harvested window, harvest
+exceptions mid-window, and the documented launch-failure contract (a
+failing launch's item never enters the window — cleanup is the
+launcher's own job).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.runtime.dispatch import run_pipelined
+
+
+def test_depth_validation():
+    with pytest.raises(ValueError, match="depth"):
+        run_pipelined([], lambda i: i, lambda i, o: 0, depth=0)
+
+
+def test_return_sum_counts_none_as_zero():
+    total = run_pipelined(
+        [1, 2, 3], lambda i: i,
+        lambda i, o: None if i == 2 else i, depth=2)
+    assert total == 4
+
+
+def test_on_abandon_ordering_with_depth_3():
+    """A harvest failure hands the launched-but-unharvested window to
+    on_abandon in launch order, then re-raises."""
+    events = []
+
+    def launch(i):
+        events.append(("launch", i))
+        return f"out{i}"
+
+    def harvest(i, out):
+        events.append(("harvest", i))
+        if i == 1:
+            raise RuntimeError("boom")
+        return 1
+
+    abandoned = []
+    with pytest.raises(RuntimeError, match="boom"):
+        run_pipelined(range(5), launch, harvest, depth=3,
+                      on_abandon=lambda i, o: abandoned.append((i, o)))
+    # depth 3 runs two launches ahead: when item 1's harvest raises,
+    # items 2 and 3 are in the window (4 never launched) and must be
+    # abandoned oldest-first with their launch outputs
+    assert abandoned == [(2, "out2"), (3, "out3")]
+    assert [e for e in events if e[0] == "harvest"] == [
+        ("harvest", 0), ("harvest", 1)]
+    assert ("launch", 4) not in events
+
+
+def test_harvest_exception_mid_window_without_on_abandon():
+    """No on_abandon: the exception still propagates (the window is
+    simply dropped — callers that can lose work must pass a handler)."""
+    def harvest(i, out):
+        if i == 0:
+            raise RuntimeError("boom")
+        return 1
+
+    with pytest.raises(RuntimeError, match="boom"):
+        run_pipelined(range(4), lambda i: i, harvest, depth=2)
+
+
+def test_launch_failure_item_never_enters_window():
+    """A launch exception is the launcher's own to clean up: its item is
+    NOT handed to on_abandon; only already-launched items are."""
+    harvested, abandoned = [], []
+
+    def launch(i):
+        if i == 2:
+            raise ValueError("launch fail")
+        return i * 10
+
+    def harvest(i, out):
+        harvested.append(i)
+        return 1
+
+    with pytest.raises(ValueError, match="launch fail"):
+        run_pipelined(range(4), launch, harvest, depth=2,
+                      on_abandon=lambda i, o: abandoned.append(i))
+    assert harvested == [0]          # window was one behind
+    assert abandoned == [1]          # launched, un-harvested
+    assert 2 not in abandoned        # the failing item: launcher's problem
+    assert 3 not in abandoned        # never reached
+
+
+def test_depth_1_is_synchronous():
+    """depth=1 interleaves launch/harvest strictly — at most one
+    launched-but-unharvested item ever exists."""
+    events = []
+    run_pipelined(
+        range(3),
+        lambda i: events.append(("launch", i)) or i,
+        lambda i, o: events.append(("harvest", i)) or 1,
+        depth=1)
+    assert events == [("launch", 0), ("harvest", 0),
+                      ("launch", 1), ("harvest", 1),
+                      ("launch", 2), ("harvest", 2)]

@@ -25,6 +25,32 @@ def test_heartbeat_states():
     assert m.alive_workers(now=7.5) == ["w0"]
 
 
+def test_heartbeat_forget_drops_worker_and_median_skew():
+    m = HeartbeatMonitor(dead_after=200.0, straggler_factor=3.0)
+    for t in range(5):
+        m.beat("w0", now=float(t))           # 1s intervals
+        m.beat("slow", now=float(t) * 100.0)  # 100s intervals
+    # the slow worker's history dominates the fleet median (100s), so a
+    # 4s gap on w0 reads as ALIVE
+    assert m.status("w0", now=8.0) == ALIVE
+    assert m.forget("slow") is True
+    # with its intervals gone the median is w0's 1s: 4s gap > 3x median
+    assert m.status("w0", now=8.0) == STRAGGLER
+    assert "slow" not in m.fleet(now=8.0)
+    assert m.status("slow", now=8.0) == DEAD   # untracked reads as dead
+    assert m.forget("slow") is False           # already gone
+    assert m.forget("never-seen") is False
+
+
+def test_heartbeat_median_cache_tracks_beats():
+    m = HeartbeatMonitor()
+    m.beat("w0", now=0.0)
+    m.beat("w0", now=10.0)
+    assert m._median_interval() == 10.0
+    m.beat("w0", now=30.0)                     # new interval: cache refresh
+    assert m._median_interval() == 20.0        # median of [10, 20] -> upper
+
+
 def test_plan_mesh_elastic():
     assert plan_mesh(512, 16, pod_size=256) == (2, 16, 16)
     assert plan_mesh(256, 16) == (16, 16)
@@ -35,6 +61,23 @@ def test_plan_mesh_elastic():
     # below one replica: TP degrades by powers of two
     assert plan_mesh(12, 16) == (1, 8)
     assert plan_mesh(1, 16) == (1, 1)
+
+
+def test_plan_mesh_edge_cases():
+    # an empty (or negative) fleet has no mesh: hard error, not (0, ...)
+    with pytest.raises(ValueError, match="n_devices"):
+        plan_mesh(0, 4)
+    with pytest.raises(ValueError, match="n_devices"):
+        plan_mesh(-3, 4)
+    with pytest.raises(ValueError, match="model_degree"):
+        plan_mesh(4, 0)
+    # non-power-of-two TP degree: preserved while a replica fits ...
+    assert plan_mesh(6, 6) == (1, 6)
+    assert plan_mesh(12, 6) == (2, 6)
+    assert plan_mesh(5, 6) == (1, 3)      # ... else halves (6 -> 3)
+    assert plan_mesh(3, 6) == (1, 3)
+    assert plan_mesh(2, 6) == (2, 1)      # 3 -> 1: pure data parallel
+    assert plan_mesh(1, 1) == (1, 1)
 
 
 def test_alignment_service_end_to_end(rng):
