@@ -1,0 +1,235 @@
+"""The observability gates: tracing overhead, trace validity, reconcile.
+
+Instrumentation that distorts what it measures is worse than none, so
+the obs layer ships with its own benchmark asserting four contracts on
+``bench_serving``'s pipelined stream:
+
+1. **Disabled overhead <1%** — with tracing off every ``span()`` call is
+   one branch returning a shared no-op.  The per-call cost is
+   microbenchmarked, weighted by the span/instant/counter call counts an
+   enabled run actually makes, and projected against the measured
+   per-request latency: the instrumented call sites must cost <1% of
+   the stream.  (Projection, not A/B: there is no uninstrumented build
+   to diff against, and on a 1-core CI box run-to-run noise would
+   swamp a sub-1% signal.)
+2. **Enabled overhead <10%** — the same warm stream drained with
+   tracing on vs off, best-of-N; recording spans must stay cheap enough
+   to leave on during an incident.
+3. **Trace validity** — a multi-worker ``serve()`` run exports a Chrome
+   trace that passes :func:`repro.obs.export.validate_chrome_trace`,
+   carries one named track per gateway worker that did work, and on
+   every worker track the launch + harvest spans cover >=95% of the
+   gateway busy time (batch formation must be a sliver — if it is not,
+   the dispatcher is burning host time off the books).
+4. **Chaos reconcile** — a faulty run (worker kill + injected launch
+   failures) ends with ``Gateway.metrics()['reconcile']`` exact:
+   submitted == completed + degraded + filtered + dead-lettered, and
+   the per-kind dead-letter counters match the record list.
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.serve import AlignmentService, FaultPlan
+
+from .bench_serving import _clone, _drain_stream, _stream
+from .common import emit
+
+# the enabled-vs-disabled macro gate; generous because the stream is
+# milliseconds-scale on a 1-core CI box
+MAX_ENABLED_OVERHEAD = 0.10
+MAX_DISABLED_OVERHEAD = 0.01
+MIN_COVERAGE = 0.95
+
+
+def _percall_s(fn, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def _disabled_call_costs(n: int = 100_000) -> dict:
+    """Per-call cost of each disabled-path entry point (includes the
+    loop overhead — an upper bound, which is the conservative side)."""
+    assert not obs_trace.enabled()
+
+    def spn():
+        with obs_trace.span("bench.x", cat="bench"):
+            pass
+
+    return {
+        "span": _percall_s(spn, n),
+        "instant": _percall_s(
+            lambda: obs_trace.instant("bench.x", cat="bench"), n),
+        "counter": _percall_s(
+            lambda: obs_trace.counter("bench.x", 1.0), n),
+    }
+
+
+def _coverage_by_worker(spans) -> dict:
+    """Per worker track: gateway busy seconds and the launch+harvest
+    fraction of them (instants and non-gateway cats excluded)."""
+    busy: dict = {}
+    covered: dict = {}
+    for s in spans:
+        if s.cat != "gateway" or s.t1 is None:
+            continue
+        dur = s.t1 - s.t0
+        busy[s.tid] = busy.get(s.tid, 0.0) + dur
+        if s.name in ("gw.launch", "gw.harvest"):
+            covered[s.tid] = covered.get(s.tid, 0.0) + dur
+    return {tid: {"busy_s": b, "coverage": covered.get(tid, 0.0) / b}
+            for tid, b in busy.items() if b > 0.0}
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    n = 48 if quick else 128
+    lo, hi = 24, 96
+    block = 8
+    base = _stream(rng, n, lo, hi)
+    failures = []
+
+    obs_trace.disable()
+    obs_trace.clear()
+
+    # -- gates 1+2: overhead off / on ------------------------------------
+    svc = AlignmentService(max_len=hi, block=block, pipeline_depth=3)
+    _drain_stream(svc, base)              # warm: compile every bucket plan
+    t_off, t_on = [], []
+    span_calls = counter_calls = instant_calls = 0
+    for _ in range(3 if quick else 5):
+        gc.collect()
+        obs_trace.disable()
+        t, res_off = _drain_stream(svc, base)
+        t_off.append(t)
+        gc.collect()
+        obs_trace.clear()
+        obs_trace.enable()
+        t, res_on = _drain_stream(svc, base)
+        t_on.append(t)
+        sp = obs_trace.spans()
+        span_calls = len([s for s in sp if s.t1 is not None]) \
+            + obs_trace.dropped()
+        instant_calls = len([s for s in sp if s.t1 is None])
+        counter_calls = len(obs_trace.counters())
+        obs_trace.disable()
+    if res_off != res_on:
+        failures.append("tracing changed results (must be observe-only)")
+    t_disabled = float(min(t_off))
+    t_enabled = float(min(t_on))
+    enabled_overhead = t_enabled / t_disabled - 1.0
+    if enabled_overhead > MAX_ENABLED_OVERHEAD:
+        failures.append(
+            f"enabled tracing adds {enabled_overhead:.1%} to the pipelined "
+            f"stream (gate: <{MAX_ENABLED_OVERHEAD:.0%})")
+
+    costs = _disabled_call_costs(20_000 if quick else 100_000)
+    projected_s = (span_calls * costs["span"]
+                   + instant_calls * costs["instant"]
+                   + counter_calls * costs["counter"])
+    disabled_overhead = projected_s / t_disabled
+    if disabled_overhead > MAX_DISABLED_OVERHEAD:
+        failures.append(
+            f"disabled-path call sites project to {disabled_overhead:.2%} "
+            f"of the stream (gate: <{MAX_DISABLED_OVERHEAD:.0%})")
+
+    emit("obs/disabled_projected", projected_s / n,
+         f"frac={disabled_overhead:.5f} span_ns="
+         f"{costs['span'] * 1e9:.0f} calls={span_calls}")
+    emit("obs/enabled_drain", t_enabled / n,
+         f"overhead={enabled_overhead:.3f} stream_s={t_enabled:.3f}")
+
+    # -- gate 3: serve() trace exports valid and covered ------------------
+    obs_trace.clear()
+    obs_trace.enable()
+    svc2 = AlignmentService(max_len=hi, block=block, pipeline_depth=2)
+    svc2.submit_all(_clone(base))
+    t0 = time.perf_counter()
+    svc2.serve(n_workers=2, timeout_s=300.0)
+    t_serve = time.perf_counter() - t0
+    spans = obs_trace.spans()
+    obj = obs_export.to_chrome_trace()
+    obs_trace.disable()
+    errs = obs_export.validate_chrome_trace(obj)
+    if errs:
+        failures.append(f"exported trace has {len(errs)} schema "
+                        f"violations (first: {errs[0]})")
+    workers = {s.args["worker"] for s in spans
+               if s.name == "gw.launch" and s.args}
+    tracks = {ev["args"]["name"] for ev in obj["traceEvents"]
+              if ev["ph"] == "M" and ev["name"] == "thread_name"}
+    missing = {f"gw-{w}" for w in workers} - tracks
+    if not workers:
+        failures.append("serve() run produced no gw.launch spans")
+    if missing:
+        failures.append(f"worker(s) {sorted(missing)} launched batches "
+                        f"but have no named track in the export")
+    cov = _coverage_by_worker(spans)
+    worker_cov = {t: c for t, c in cov.items() if t.startswith("gw-")}
+    min_cov = min((c["coverage"] for c in worker_cov.values()),
+                  default=0.0)
+    if min_cov < MIN_COVERAGE:
+        failures.append(
+            f"launch+harvest cover only {min_cov:.1%} of gateway busy "
+            f"time on the worst worker track (gate: >={MIN_COVERAGE:.0%})")
+    emit("obs/serve_traced", t_serve / n,
+         f"events={len(obj['traceEvents'])} workers={len(worker_cov)} "
+         f"min_coverage={min_cov:.3f}")
+
+    # -- gate 4: chaos run reconciles exactly -----------------------------
+    obs_trace.clear()
+    plan = FaultPlan(seed=7, kill={"w0": 1}, fail_launch_p=0.15)
+    svc3 = AlignmentService(max_len=hi, block=4, pipeline_depth=2,
+                            fault_plan=plan, redispatch_after=0.75,
+                            max_retries=2)
+    svc3.submit_all(_clone(base))
+    t0 = time.perf_counter()
+    svc3.serve(n_workers=2, timeout_s=300.0, elastic=True, max_workers=4)
+    t_chaos = time.perf_counter() - t0
+    m = svc3.metrics()
+    rec = m["reconcile"]
+    if not rec["ok"]:
+        failures.append(f"chaos metrics do not reconcile: {rec}")
+    counters = m["metrics"]["counters"]
+    for kind, k_n in m["dead_letters_by_kind"].items():
+        got = int(counters.get(f"gw_dead_letters_total{{kind={kind}}}", 0))
+        if got != k_n:
+            failures.append(
+                f"dead-letter counter kind={kind}: metric {got} != "
+                f"{k_n} records")
+    if int(counters.get("gw_retries_total", 0)) != m["stats"]["retries"]:
+        failures.append(
+            f"retry counter {counters.get('gw_retries_total')} != stats "
+            f"{m['stats']['retries']}")
+    emit("obs/chaos_reconcile", t_chaos / n,
+         f"submitted={rec['submitted']} ok={rec['ok']} "
+         f"dead={rec['dead_lettered']} kinds={m['dead_letters_by_kind']}")
+
+    if failures:
+        raise AssertionError("; ".join(failures))
+    return {
+        "n_requests": n,
+        "disabled_overhead_frac": disabled_overhead,
+        "enabled_overhead_frac": enabled_overhead,
+        "span_ns_disabled": costs["span"] * 1e9,
+        "spans_per_stream": span_calls,
+        "trace_events": len(obj["traceEvents"]),
+        "min_worker_coverage": min_cov,
+        "reconcile_ok": bool(rec["ok"]),
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print(run(quick=args.quick))

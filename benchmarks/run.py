@@ -19,11 +19,14 @@ import json
 import sys
 import traceback
 
+from repro.obs import metrics as obs_metrics
+from repro.runtime import plan as plan_mod
+
 from . import (bench_kernels_table2, bench_scaling_fig3,
                bench_vs_handcoded_fig45, bench_vs_software_fig6,
                bench_vs_naive_hls, bench_tiling, bench_bucketing,
                bench_mapping, bench_serving, bench_fill, bench_pairhmm,
-               bench_filter, bench_autotune, bench_faults)
+               bench_filter, bench_autotune, bench_faults, bench_obs)
 
 SUITES = [
     ("Table 2 (15 kernels)", bench_kernels_table2),
@@ -40,6 +43,7 @@ SUITES = [
     ("Filter ladder (myers vs full DP)", bench_filter),
     ("Autotune (sweep + warm boot)", bench_autotune),
     ("Faults (chaos gate: kill 2 of 4)", bench_faults),
+    ("Observability (overhead + trace gates)", bench_obs),
 ]
 
 # a headline may regress by this fraction before --compare fails
@@ -118,6 +122,18 @@ def main() -> None:
         try:
             out = mod.run(quick=args.quick)
             if isinstance(out, dict):
+                # regression attribution without a rerun: every suite's
+                # dump carries the process-global metrics (plan-cache
+                # hit/miss/compile counters) and cumulative plan totals
+                # as they stood when the suite finished — a slow fresh
+                # run with a fat compile_s delta is a compile storm, not
+                # a slow kernel
+                out = dict(
+                    out, observability={
+                        "metrics": obs_metrics.get_registry().snapshot(),
+                        "plan_cache_totals":
+                            plan_mod.plan_cache_info()["totals"],
+                    })
                 metrics[mod.__name__.rsplit(".", 1)[-1]] = out
         except Exception:  # noqa: BLE001
             failures += 1

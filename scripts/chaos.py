@@ -123,6 +123,27 @@ def run_seed(seed, args):
     if args.kill and stats["redispatched"] < 1:
         violations.append("no stranded batch was ever redispatched")
 
+    # the metrics snapshot must reconcile exactly with what this script
+    # counted off the futures — same invariant, independent bookkeeping
+    m = svc.metrics()
+    rec = m["reconcile"]
+    if not rec["ok"]:
+        violations.append(f"metrics snapshot does not reconcile: {rec}")
+    if rec["dead_lettered"] != lettered:
+        violations.append(
+            f"metrics count {rec['dead_lettered']} dead letters; "
+            f"futures show {lettered}")
+    counters = m["metrics"]["counters"]
+    for kind, k_n in m["dead_letters_by_kind"].items():
+        got = int(counters.get(f"gw_dead_letters_total{{kind={kind}}}", 0))
+        if got != k_n:
+            violations.append(
+                f"dead-letter metric kind={kind}: {got} != {k_n} records")
+    if int(counters.get("gw_retries_total", 0)) != int(stats["retries"]):
+        violations.append(
+            f"retry metric {counters.get('gw_retries_total')} != "
+            f"stats {stats['retries']}")
+
     return {
         "seed": seed, "wall_s": round(wall_s, 3),
         "completed": completed, "dead_lettered": lettered,
@@ -131,6 +152,9 @@ def run_seed(seed, args):
         "redispatched": int(stats["redispatched"]),
         "retries": int(stats["retries"]),
         "faults": int(stats["faults"]),
+        "dead_letters": [dict(d) for d in svc.dead_letters],
+        "dead_letters_by_kind": m["dead_letters_by_kind"],
+        "reconcile": rec,
         "violations": violations,
     }
 
@@ -158,9 +182,16 @@ def main(argv=None):
     ap.add_argument("--timeout-s", type=float, default=300.0)
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write the sweep report to OUT")
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="record spans for the faulty runs and write a "
+                         "Perfetto-loadable Chrome trace to OUT")
     args = ap.parse_args(argv)
     if args.kill > args.workers:
         ap.error(f"--kill {args.kill} > --workers {args.workers}")
+
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()
 
     reports = []
     for seed in args.seeds:
@@ -173,16 +204,34 @@ def main(argv=None):
               f"redispatched={rep['redispatched']} "
               f"retries={rep['retries']} wall_s={rep['wall_s']}",
               flush=True)
+        shown = rep["dead_letters"][:20]
+        for d in shown:
+            print(f"  dead-letter rid={d['rid']} kind={d['kind']} "
+                  f"worker={d['worker']} attempts={d['attempts']} "
+                  f"ts={d['ts']:.3f}", flush=True)
+        if len(rep["dead_letters"]) > len(shown):
+            print(f"  ... and {len(rep['dead_letters']) - len(shown)} "
+                  f"more dead letters", flush=True)
         for v in rep["violations"]:
             print(f"  VIOLATION: {v}", flush=True)
 
     violations = [v for rep in reports for v in rep["violations"]]
-    out = {"config": {k: v for k, v in vars(args).items() if k != "json"},
+    out = {"config": {k: v for k, v in vars(args).items()
+                      if k not in ("json", "trace")},
            "seeds": reports, "ok": not violations}
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
         print(f"wrote {args.json}", flush=True)
+    if args.trace:
+        from repro.obs import export as obs_export
+        obj = obs_export.write_chrome_trace(args.trace)
+        obs_trace.disable()
+        errs = obs_export.validate_chrome_trace(obj)
+        if errs:
+            violations.extend(f"trace: {e}" for e in errs)
+        print(f"wrote {args.trace} ({len(obj['traceEvents'])} events, "
+              f"{'INVALID' if errs else 'valid'})", flush=True)
     if violations:
         print(f"chaos sweep: {len(violations)} invariant violation(s)",
               flush=True)

@@ -24,5 +24,6 @@ python -m benchmarks.run --quick --only fill   # packed/strip parity gate
 python -m benchmarks.run --quick --only pairhmm  # forward-oracle parity gate
 python -m benchmarks.run --quick --only filter   # myers bit-exactness gate
 python -m benchmarks.run --quick --only autotune # table round-trip + parity gate
+python -m benchmarks.run --quick --only bench_obs # tracing overhead + reconcile gate
 python scripts/lint_plans.py                     # trace-time plan lint gate
 python scripts/chaos.py --seeds 0 --requests 32  # gateway fault-tolerance gate

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import alphabets
+from repro.obs import trace as obs_trace
 from repro.runtime import bucketing
 from repro.runtime import plan as plan_mod
 
@@ -150,7 +151,9 @@ class ReadMapper:
         read_list = self._as_read_list(reads, lens)
         if names is None:
             names = [f"read{i}" for i in range(len(read_list))]
-        fwd_rows, rc_rows = self._chain_reads(read_list)
+        with obs_trace.span("map.seed_chain", cat="mapper",
+                            n=len(read_list)):
+            fwd_rows, rc_rows = self._chain_reads(read_list)
 
         jobs: list = []
         job_meta: list = []          # (record index, flag, seq, mapq, ch)
@@ -181,10 +184,11 @@ class ReadMapper:
             # whose best edit distance already exceeds the k-budget can
             # never pass the extension-score gate, so full DP (rung 2)
             # only runs on survivors
-            keep = extend_mod.screen_jobs(
-                jobs, k_frac=self.filter_k_frac,
-                engine_name=self.filter_engine, block=self.screen_block,
-                pipeline_depth=self.pipeline_depth)
+            with obs_trace.span("map.screen", cat="mapper", n=len(jobs)):
+                keep = extend_mod.screen_jobs(
+                    jobs, k_frac=self.filter_k_frac,
+                    engine_name=self.filter_engine, block=self.screen_block,
+                    pipeline_depth=self.pipeline_depth)
             kept_jobs, kept_meta = [], []
             for job, meta, ok in zip(jobs, job_meta, keep):
                 if ok:
@@ -195,10 +199,11 @@ class ReadMapper:
                     records[i] = sam_mod.unmapped(names[i], read_list[i])
             jobs, job_meta = kept_jobs, kept_meta
 
-        ext = extend_mod.extend_jobs(jobs, engine_name=self.engine_name,
-                                     block=self.block,
-                                     pipeline_depth=self.pipeline_depth,
-                                     gap_mode=self.gap_mode)
+        with obs_trace.span("map.extend", cat="mapper", n=len(jobs)):
+            ext = extend_mod.extend_jobs(jobs, engine_name=self.engine_name,
+                                         block=self.block,
+                                         pipeline_depth=self.pipeline_depth,
+                                         gap_mode=self.gap_mode)
         for (i, flag, oriented, mapq, f1), res in zip(job_meta, ext):
             # extension-score gate: a true placement scores near
             # match * read_len; impostors (e.g. one spurious anchor) fall

@@ -26,6 +26,8 @@ import numpy as np
 import repro.core.traceback as tb_mod
 import repro.core.types as T
 
+from repro.obs import trace as obs_trace
+
 from . import bucketing
 from . import plan as plan_mod
 
@@ -49,15 +51,24 @@ def run_pipelined(items: Iterable, launch: Callable, harvest: Callable, *,
         raise ValueError(f"pipeline depth must be >= 1, got {depth}")
     window: collections.deque = collections.deque()
     total = 0
+
+    def _launch(item):
+        with obs_trace.span("dispatch.launch", cat="dispatch"):
+            return launch(item)
+
+    def _harvest(it, out):
+        with obs_trace.span("dispatch.harvest", cat="dispatch"):
+            return harvest(it, out)
+
     try:
         for item in items:
-            window.append((item, launch(item)))
+            window.append((item, _launch(item)))
             while len(window) >= depth:
                 it, out = window.popleft()
-                total += harvest(it, out) or 0
+                total += _harvest(it, out) or 0
         while window:
             it, out = window.popleft()
-            total += harvest(it, out) or 0
+            total += _harvest(it, out) or 0
     except BaseException:
         if on_abandon is not None:
             while window:

@@ -22,6 +22,9 @@ import numpy as np
 import repro.core.types as T
 import repro.core.traceback as tb_mod
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from . import registry
 
 
@@ -67,6 +70,21 @@ class PlanKey:
     tb_pack: int = 1                 # traceback pointers packed per byte
     semiring: str = "maxplus"        # path algebra: maxplus|minplus|logsumexp
     xdrop: Optional[int] = None      # X-drop early termination; None = off
+
+
+def plan_key_str(key: PlanKey) -> str:
+    """Stable short string identity of a plan (the compile-ledger key):
+    ``kernel/engine/QxR/bN/tb/mode/sSpP/semiring[/xN][/placement]``."""
+    q, r = key.bucket_shape
+    parts = [key.kernel, key.engine, f"{q[0]}x{r[0]}",
+             "b1" if key.batch_size is None else f"b{key.batch_size}",
+             "tb" if key.with_traceback else "notb", key.mode,
+             f"s{key.strip}p{key.tb_pack}", key.semiring]
+    if key.xdrop is not None:
+        parts.append(f"x{key.xdrop}")
+    if key.placement:
+        parts.append(key.placement)
+    return "/".join(parts)
 
 
 def _build_fn(key: PlanKey, spec: T.DPKernelSpec,
@@ -187,9 +205,17 @@ class CompiledPlan:
         if self.compile_s is None:
             # first dispatch pays trace + compile synchronously; time it
             # (execution stays async, so this is compile-dominated)
-            t0 = time.perf_counter()
-            out = self._fn(params, query, ref, q_len, r_len)
-            self.compile_s = time.perf_counter() - t0
+            kstr = plan_key_str(self.key)
+            with obs_trace.span("plan.compile", cat="plan", key=kstr):
+                t0 = time.perf_counter()
+                out = self._fn(params, query, ref, q_len, r_len)
+                self.compile_s = time.perf_counter() - t0
+            # the capped per-key ledger keeps this attribution across
+            # clear_plan_cache(keep_stats=True)
+            obs_metrics.record_compile(kstr, self.compile_s)
+            obs_metrics.REGISTRY.counter("plan_compiles_total").inc()
+            obs_metrics.REGISTRY.histogram("plan_compile_s").observe(
+                self.compile_s)
             return out
         return self._fn(params, query, ref, q_len, r_len)
 
@@ -328,9 +354,17 @@ def _tuned_defaults(kernel: str, engine_name: str, bucket: tuple,
     written against a richer engine cannot poison resolution."""
     try:
         from repro.tune import table as tune_table
-        tuned = tune_table.lookup(kernel, engine_name, bucket, batch_size)
+        with obs_trace.span("plan.tune_lookup", cat="plan", kernel=kernel,
+                            engine=engine_name):
+            tuned = tune_table.lookup(kernel, engine_name, bucket,
+                                      batch_size)
     except Exception:
+        obs_metrics.REGISTRY.counter("plan_tune_lookups_total",
+                                     outcome="error").inc()
         return None
+    obs_metrics.REGISTRY.counter(
+        "plan_tune_lookups_total",
+        outcome="hit" if tuned else "miss").inc()
     if not tuned:
         return None
     sup = registry.engine_options(engine_name)
@@ -460,11 +494,13 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
     if plan is not None:
         _STATS["hits"] += 1
         plan.hits += 1
+        obs_metrics.REGISTRY.counter("plan_cache_hits_total").inc()
         return plan
     with _LOCK:
         plan = _CACHE.get(cache_key)
         if plan is None:
             _STATS["misses"] += 1
+            obs_metrics.REGISTRY.counter("plan_cache_misses_total").inc()
             key = PlanKey(kernel=spec.name, engine=engine_name,
                           bucket_shape=(tuple(q_shape), tuple(r_shape)),
                           batch_size=batch_size, with_traceback=wtb,
@@ -477,6 +513,7 @@ def get_plan(spec: T.DPKernelSpec, engine_name: str,
         else:
             _STATS["hits"] += 1
             plan.hits += 1
+            obs_metrics.REGISTRY.counter("plan_cache_hits_total").inc()
     return plan
 
 
@@ -513,7 +550,8 @@ def plan_cache_info() -> dict[str, Any]:
     return {"size": len(_CACHE), "hits": _STATS["hits"],
             "misses": _STATS["misses"],
             "keys": [p.key for p in _CACHE.values()],
-            "plans": plans, "totals": _totals()}
+            "plans": plans, "totals": _totals(),
+            "compile_ledger": obs_metrics.compile_ledger_snapshot()}
 
 
 def clear_plan_cache(keep_stats: bool = False) -> None:
@@ -530,8 +568,12 @@ def clear_plan_cache(keep_stats: bool = False) -> None:
                 if p.compile_s is not None:
                     _RETIRED["compiled"] += 1
                     _RETIRED["compile_s"] += p.compile_s
+                # per-key attribution survives the fold via the ledger
+                obs_metrics.COMPILE_LEDGER.update_usage(
+                    plan_key_str(p.key), p.calls, p.hits)
         else:
             _STATS["hits"] = _STATS["misses"] = 0
             _RETIRED.update(plans=0, calls=0, hits=0,
                             compiled=0, compile_s=0.0)
+            obs_metrics.COMPILE_LEDGER.clear()
         _CACHE.clear()

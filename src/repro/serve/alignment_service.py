@@ -419,14 +419,16 @@ class AlignmentService(Gateway):
                 f"request {req.rid}: lengths ({len(req.query)}, "
                 f"{len(req.ref)}) exceed max_len {self.max_len}")
         if not self._admit(req.rid):
+            self._count_submitted(req)
             with self._lock:     # shed: resolve newest with a typed error
                 self._dead_letter(
                     self._resolve_channel(req.kernel), req,
                     ShedOverload(
                         f"request {req.rid}: {self._pending} requests "
                         f"pending >= max_pending {self.max_pending}"),
-                    free_pending=False)
+                    free_pending=False, worker="submit")
             return AlignFuture(req, self)
+        self._count_submitted(req)
         self._stamp_deadline(req)
         with self._lock:
             self._pending += 1

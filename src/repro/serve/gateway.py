@@ -55,6 +55,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.ft import DEAD, HeartbeatMonitor
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime import dispatch as dispatch_mod
 
 
@@ -335,12 +337,13 @@ class Gateway:
         self.dispatches = collections.deque(maxlen=4096)
         self.dead_letters: List[dict] = []
         self.stats: Dict[str, object] = {
-            "completed": 0, "retries": 0, "dead_lettered": 0,
-            "redispatched": 0, "timed_out": 0, "shed": 0, "degraded": 0,
-            "filtered": 0, "faults": 0, "worker_errors": 0,
-            "killed": [], "respawned": [],
+            "submitted": 0, "completed": 0, "retries": 0,
+            "dead_lettered": 0, "redispatched": 0, "timed_out": 0,
+            "shed": 0, "degraded": 0, "filtered": 0, "faults": 0,
+            "worker_errors": 0, "killed": [], "respawned": [],
         }
         self._pending = 0
+        self._metrics = obs_metrics.MetricsRegistry()
         self._clock = clock
         self._lock = threading.RLock()
         self._qinfo: Dict[object, tuple] = {}    # key -> (channel, bucket)
@@ -391,6 +394,7 @@ class Gateway:
         if self.backpressure == "shed":
             with self._lock:
                 self.stats["shed"] += 1
+            self._metrics.counter("gw_shed_total").inc()
             return False
         # block: work batches off the queues synchronously until there is
         # room.  Outside wait() nothing is in flight, so queued work is
@@ -411,11 +415,13 @@ class Gateway:
         return [self.submit(r) for r in reqs]
 
     # -- batch formation ------------------------------------------------------
-    def _next_batch(self):
+    def _next_batch(self, worker: str = "w0"):
         """Pop the next ``(channel, bucket, jobs, coalesced, rows)``
         batch, smallest bucket first per channel, or None when every
         queue is empty (or cooling down in retry backoff)."""
-        with self._lock:
+        sp = obs_trace.span("gw.form", cat="gateway", worker=worker)
+        with sp, self._lock:
+            self._sample_queues()
             now = self._clock()
             for key in sorted((k for k, q in self.queues.items() if q),
                               key=self._qorder.__getitem__):
@@ -431,7 +437,8 @@ class Gateway:
                     if dl is not None and now >= dl:
                         self._dead_letter(ch, j, DeadlineExceeded(
                             f"{ch.name}/{ch.job_rid(j)}: deadline expired "
-                            f"{now - dl:.3f}s ago before dispatch"))
+                            f"{now - dl:.3f}s ago before dispatch"),
+                            worker=worker)
                         continue
                     live.append(j)
                 queue[:] = live
@@ -465,8 +472,24 @@ class Gateway:
                 if not queue and len(jobs) < block:
                     bucket, block, coalesced = ch.coalesce(
                         bucket, jobs, block)
+                sp.set(channel=ch.name, bucket=list(bucket), n=len(jobs))
                 return ch.name, bucket, jobs, coalesced, block
+            sp.drop()          # idle poll: keep worker tracks span-clean
             return None
+
+    def _sample_queues(self) -> None:
+        """Per-channel queue-depth gauges plus the Perfetto counter
+        track samples (caller holds the lock)."""
+        per = {name: 0 for name in self._gw_channels}
+        for key, q in self.queues.items():
+            if q:
+                ch, _ = self._qinfo[key]
+                per[ch.name] = per.get(ch.name, 0) + len(q)
+        for name, n in per.items():
+            self._metrics.gauge("gw_queue_depth", channel=name).set(n)
+        self._metrics.gauge("gw_pending").set(self._pending)
+        obs_trace.counter("gw.queue_depth", sum(per.values()))
+        obs_trace.counter("gw.pending", self._pending)
 
     # -- launch / harvest (the two pipeline stages) ---------------------------
     def _launch(self, worker: str, item) -> InflightBatch:
@@ -485,29 +508,42 @@ class Gateway:
             # requeue it without charging an attempt; batches already
             # launched by this worker stay in ``inflight`` until the
             # heartbeat deadline reclaims them.
+            obs_trace.instant("gw.kill", cat="gateway", worker=worker,
+                              seq=seq)
             with self._lock:
                 self._killed.add(worker)
                 self.stats["killed"].append({"worker": worker, "seq": seq})
-                self._recover_jobs(ch, jobs, None, count_attempt=False)
+                self._recover_jobs(ch, jobs, None, count_attempt=False,
+                                   worker=worker)
             raise WorkerKilled(f"worker {worker!r} killed at dispatch #{seq}")
         degraded = (self.degrade_watermark is not None and ch.can_degrade
                     and self._pending >= self.degrade_watermark)
+        sp = obs_trace.span("gw.launch", cat="gateway", worker=worker,
+                            channel=name, seq=seq, n=len(jobs))
         try:
-            if fp is not None and fp.fails_launch(worker, seq):
-                with self._lock:
-                    self.stats["faults"] += 1
-                raise InjectedFault(
-                    f"launch #{seq} on worker {worker!r} ({ch.name})")
-            if degraded:
-                ch.launch_degraded(bucket, jobs, block)
-                survivors: List = []
-                out = None
-            else:
-                survivors, out = ch.launch(bucket, jobs, block)
+            with sp:
+                if fp is not None and fp.fails_launch(worker, seq):
+                    with self._lock:
+                        self.stats["faults"] += 1
+                    raise InjectedFault(
+                        f"launch #{seq} on worker {worker!r} ({ch.name})")
+                if degraded:
+                    sp.set(degraded=True)
+                    obs_trace.instant("gw.degrade", cat="gateway",
+                                      worker=worker, channel=name,
+                                      n=len(jobs))
+                    ch.launch_degraded(bucket, jobs, block)
+                    survivors: List = []
+                    out = None
+                else:
+                    with obs_trace.annotate(f"gw.launch/{name}"):
+                        survivors, out = ch.launch(bucket, jobs, block)
         except BaseException as exc:
             with self._lock:
-                self._recover_jobs(ch, jobs, exc, count_attempt=True)
+                self._recover_jobs(ch, jobs, exc, count_attempt=True,
+                                   worker=worker)
             raise
+        self._observe_batch_shape(ch, bucket, jobs, block)
         ib = InflightBatch(worker=worker, kernel=name, bucket=bucket,
                            reqs=survivors,
                            gens=[j.gen for j in survivors], out=out,
@@ -522,6 +558,21 @@ class Gateway:
             self.dispatches.append(rec)
         return ib
 
+    def _observe_batch_shape(self, ch: Channel, bucket, jobs,
+                             block: int) -> None:
+        """Occupancy / padding-waste histograms for one launched batch.
+        Waste uses ``job_len`` against the bucket perimeter when the
+        channel exposes lengths, else falls back to empty-row fraction."""
+        occ = len(jobs) / block if block else 1.0
+        self._metrics.histogram(
+            "gw_batch_occupancy", channel=ch.name).observe(occ)
+        used = sum(ch.job_len(j) for j in jobs)
+        denom = block * (int(bucket[0]) + int(bucket[1]))
+        waste = (max(0.0, 1.0 - used / denom) if used > 0 and denom > 0
+                 else max(0.0, 1.0 - occ))
+        self._metrics.histogram(
+            "gw_padding_waste", channel=ch.name).observe(waste)
+
     def _harvest(self, item, ib: InflightBatch) -> int:
         """Block on one launched batch and land its results.
 
@@ -533,28 +584,35 @@ class Gateway:
         ch = self._resolve_channel(item[0])
         fp = self.fault_plan
         done = 0
+        sp = obs_trace.span("gw.harvest", cat="gateway", worker=ib.worker,
+                            channel=ch.name, seq=ib.seq, n=len(ib.reqs))
+        t_h0 = self._clock()
         try:
-            if not ib.cancelled:
-                if fp is not None:
-                    lat = fp.harvest_latency(ib.worker, ib.seq)
-                    if lat > 0.0:
-                        time.sleep(lat)
-                    if fp.fails_harvest(ib.worker, ib.seq):
-                        with self._lock:
-                            self.stats["faults"] += 1
-                        raise InjectedFault(
-                            f"harvest #{ib.seq} on worker {ib.worker!r} "
-                            f"({ch.name})")
-                host = ch.materialize(ib.out)    # sync point: blocks
-                with self._lock:
-                    for i, (job, gen) in enumerate(zip(ib.reqs, ib.gens)):
-                        if job.gen != gen or ch.job_done(job):
-                            continue             # stale or double write
-                        units = ch.land(job, i, host)
-                        if units:
-                            done += units
-                            self._pending -= units
-                            self.stats["completed"] += units
+            with sp:
+                if not ib.cancelled:
+                    if fp is not None:
+                        lat = fp.harvest_latency(ib.worker, ib.seq)
+                        if lat > 0.0:
+                            time.sleep(lat)
+                        if fp.fails_harvest(ib.worker, ib.seq):
+                            with self._lock:
+                                self.stats["faults"] += 1
+                            raise InjectedFault(
+                                f"harvest #{ib.seq} on worker {ib.worker!r} "
+                                f"({ch.name})")
+                    host = ch.materialize(ib.out)    # sync point: blocks
+                    with self._lock:
+                        for i, (job, gen) in enumerate(
+                                zip(ib.reqs, ib.gens)):
+                            if job.gen != gen or ch.job_done(job):
+                                continue         # stale or double write
+                            units = ch.land(job, i, host)
+                            if units:
+                                done += units
+                                self._pending -= units
+                                self.stats["completed"] += units
+                                self._observe_latency(job, "completed")
+                sp.set(done=done)
         except BaseException as exc:
             with self._lock:
                 self._requeue_incomplete(ib, exc=exc, count_attempt=True)
@@ -563,6 +621,16 @@ class Gateway:
             with self._lock:
                 self._forget(ib)
             self.monitor.beat(ib.worker)
+        if done:
+            self._metrics.counter("gw_completed_total").inc(done)
+        if not ib.cancelled and ib.reqs:
+            # device-level throughput: padded cells the batch filled
+            cells = len(ib.reqs) * int(ib.bucket[0]) * int(ib.bucket[1])
+            self._metrics.counter("gw_cells_total").inc(cells)
+            dt = self._clock() - t_h0
+            if dt > 0.0:
+                self._metrics.histogram("gw_gcups").observe(
+                    cells / dt / 1e9)
         return done
 
     def _forget(self, ib: InflightBatch) -> None:
@@ -574,7 +642,7 @@ class Gateway:
 
     # -- failure recovery -----------------------------------------------------
     def _recover_jobs(self, ch: Channel, jobs, exc, *, count_attempt: bool,
-                      gens=None) -> int:
+                      gens=None, worker: Optional[str] = None) -> int:
         """Requeue popped-but-unfinished jobs with a bumped generation,
         under the bounded-retry contract: an attempt-charging failure
         past ``max_retries`` dead-letters the job instead, and
@@ -599,14 +667,17 @@ class Gateway:
                         f"{ch.name}/{ch.job_rid(job)}: attempt "
                         f"{job.attempts} > max_retries {self.max_retries}"
                         + (f" (last error: {exc})" if exc is not None
-                           else "")))
+                           else "")), worker=worker)
                     continue
                 self.stats["retries"] += 1
-                if self.retry_backoff_s > 0.0:
-                    job.not_before = now + self.retry_backoff_s * \
-                        (2.0 ** (job.attempts - 1))
+                self._metrics.counter("gw_retries_total").inc()
             retry.append(job)
+            if count_attempt and self.retry_backoff_s > 0.0:
+                job.not_before = now + self.retry_backoff_s * \
+                    (2.0 ** (job.attempts - 1))
         if retry:
+            obs_trace.instant("gw.retry", cat="gateway", channel=ch.name,
+                              n=len(retry), worker=worker)
             if ch.requeue_front:
                 # FIFO channels (mapping) put the failed chunk back at
                 # the front in its original relative order
@@ -628,25 +699,37 @@ class Gateway:
         ib.cancelled = True
         ch = self._resolve_channel(ib.kernel)
         return self._recover_jobs(ch, ib.reqs, exc,
-                                  count_attempt=count_attempt, gens=ib.gens)
+                                  count_attempt=count_attempt, gens=ib.gens,
+                                  worker=ib.worker)
 
     def _dead_letter(self, ch: Channel, job, exc: BaseException, *,
-                     free_pending: bool = True) -> int:
+                     free_pending: bool = True,
+                     worker: Optional[str] = None) -> int:
         """Resolve a job with a typed error result and record it.
         Caller holds the lock."""
         freed = ch.fail(job, exc)
         if freed:
             if free_pending:
                 self._pending -= freed
-            self._record_dead_letter(ch.name, ch.job_rid(job), exc)
+            self._record_dead_letter(ch.name, ch.job_rid(job), exc,
+                                     worker=worker,
+                                     attempts=getattr(job, "attempts", 0))
+            self._observe_latency(job, "dead_letter")
         return freed
 
-    def _record_dead_letter(self, channel: str, rid, exc) -> None:
+    def _record_dead_letter(self, channel: str, rid, exc, *,
+                            worker: Optional[str] = None,
+                            attempts: int = 0) -> None:
+        kind = getattr(exc, "kind", "error")
         self.stats["dead_lettered"] += 1
         self.dead_letters.append({
-            "rid": rid, "channel": channel,
-            "kind": getattr(exc, "kind", "error"),
-            "error": f"{type(exc).__name__}: {exc}"})
+            "rid": rid, "channel": channel, "kind": kind,
+            "error": f"{type(exc).__name__}: {exc}",
+            "worker": worker, "attempts": int(attempts),
+            "ts": self._clock()})
+        self._metrics.counter("gw_dead_letters_total", kind=kind).inc()
+        obs_trace.instant("gw.dead_letter", cat="gateway", channel=channel,
+                          rid=rid, kind=kind, worker=worker)
 
     def _job_resolved(self, job, units: int = 1,
                       counter: str = "completed") -> None:
@@ -655,12 +738,79 @@ class Gateway:
         with self._lock:
             self._pending -= units
             self.stats[counter] = self.stats.get(counter, 0) + units
+        self._metrics.counter(f"gw_{counter}_total").inc(units)
+        self._observe_latency(job, counter)
+
+    # -- observability --------------------------------------------------------
+    def _count_submitted(self, job=None, units: int = 1) -> None:
+        """Intake accounting: services call this for every request that
+        passed validation *and* ``_admit`` (a ``backpressure='raise'``
+        rejection never resolves, so it must never count).  Stamps the
+        submit time used for submit→resolve latency and feeds the
+        reconciliation invariant ``submitted == completed + degraded +
+        filtered + dead_lettered``."""
+        if job is not None:
+            try:
+                job._t_submit = self._clock()
+            except Exception:
+                pass                       # slotted/frozen job types
+        with self._lock:
+            self.stats["submitted"] += units
+        self._metrics.counter("gw_submitted_total").inc(units)
+
+    def _observe_latency(self, job, outcome: str) -> None:
+        """Submit→resolve latency for one resolved job (pair jobs reach
+        their site's stamp through ``job.req``)."""
+        t0 = getattr(job, "_t_submit", None)
+        if t0 is None:
+            t0 = getattr(getattr(job, "req", None), "_t_submit", None)
+        if t0 is not None:
+            self._metrics.histogram("gw_latency_s", outcome=outcome) \
+                .observe(self._clock() - t0)
+
+    def metrics(self) -> dict:
+        """One JSON-safe observability snapshot: the stats dict, every
+        metric family, dead letters by kind, plan-cache totals and the
+        reconciliation invariant the chaos gate asserts
+        (``submitted == resolved + dead_lettered``)."""
+        from repro.runtime import plan as plan_mod
+        with self._lock:
+            stats = {k: (list(v) if isinstance(v, list) else v)
+                     for k, v in self.stats.items()}
+            by_kind: Dict[str, int] = {}
+            for d in self.dead_letters:
+                by_kind[d["kind"]] = by_kind.get(d["kind"], 0) + 1
+        resolved = int(stats["completed"]) + int(stats["degraded"]) \
+            + int(stats["filtered"])
+        dead = int(stats["dead_lettered"])
+        submitted = int(stats["submitted"])
+        return {
+            "stats": stats,
+            "metrics": self._metrics.snapshot(),
+            "dead_letters_by_kind": by_kind,
+            "plan_cache": plan_mod.plan_cache_info()["totals"],
+            "reconcile": {
+                "submitted": submitted, "resolved": resolved,
+                "dead_lettered": dead,
+                "ok": submitted == resolved + dead},
+        }
+
+    def prometheus(self) -> str:
+        """This gateway's metrics in Prometheus text exposition."""
+        return self._metrics.prometheus()
+
+    def dump_trace(self, path: str) -> dict:
+        """Write everything :mod:`repro.obs.trace` collected as Chrome
+        trace-event JSON (open at https://ui.perfetto.dev); returns the
+        object written."""
+        from repro.obs import export as obs_export
+        return obs_export.write_chrome_trace(path)
 
     # -- the inline dispatcher loop -------------------------------------------
     def _step(self, worker: str = "w0") -> Optional[int]:
         """Launch + harvest one batch synchronously; #completed units, or
         ``None`` when every queue is empty."""
-        item = self._next_batch()
+        item = self._next_batch(worker)
         if item is None:
             return None
         return self._harvest(item, self._launch(worker, item))
@@ -680,7 +830,7 @@ class Gateway:
             while True:
                 if futures is not None and all(f.done() for f in futures):
                     return
-                item = self._next_batch()
+                item = self._next_batch(worker)
                 if item is None:
                     return
                 yield item
@@ -718,7 +868,8 @@ class Gateway:
         stop skewing straggler detection.
         """
         n = 0
-        with self._lock:
+        sp = obs_trace.span("gw.sweep_dead", cat="supervise")
+        with sp, self._lock:
             for worker in list(self.inflight):
                 # status() is DEAD both for tracked workers past the
                 # deadline and for workers that never beat at all
@@ -729,6 +880,10 @@ class Gateway:
                     self._killed.discard(worker)
             if n:
                 self.stats["redispatched"] += n
+                self._metrics.counter("gw_redispatched_total").inc(n)
+                sp.set(n=n)
+            else:
+                sp.drop()
         return n
 
     def redispatch_timed_out(self, now: Optional[float] = None) -> int:
@@ -739,7 +894,8 @@ class Gateway:
             return 0
         now = self._clock() if now is None else now
         n = 0
-        with self._lock:
+        sp = obs_trace.span("gw.sweep_timeout", cat="supervise")
+        with sp, self._lock:
             for worker in list(self.inflight):
                 batches = self.inflight[worker]
                 for ib in list(batches):
@@ -753,6 +909,10 @@ class Gateway:
             if n:
                 self.stats["timed_out"] += n
                 self.stats["redispatched"] += n
+                self._metrics.counter("gw_redispatched_total").inc(n)
+                sp.set(n=n)
+            else:
+                sp.drop()
         return n
 
     def sweep_deadlines(self, now: Optional[float] = None) -> int:
@@ -761,7 +921,8 @@ class Gateway:
         sweep also covers idle ones)."""
         now = self._clock() if now is None else now
         n = 0
-        with self._lock:
+        sp = obs_trace.span("gw.sweep_deadlines", cat="supervise")
+        with sp, self._lock:
             for key, queue in list(self.queues.items()):
                 if not queue:
                     continue
@@ -774,17 +935,22 @@ class Gateway:
                     if dl is not None and now >= dl:
                         n += self._dead_letter(ch, j, DeadlineExceeded(
                             f"{ch.name}/{ch.job_rid(j)}: deadline expired "
-                            f"{now - dl:.3f}s ago in queue"))
+                            f"{now - dl:.3f}s ago in queue"),
+                            worker="supervisor")
                         continue
                     live.append(j)
                 queue[:] = live
+            if n:
+                sp.set(n=n)
+            else:
+                sp.drop()
         return n
 
     # -- the multi-worker pool ------------------------------------------------
     def _drive(self, worker: str, stop: threading.Event) -> int:
         def batches() -> Iterator:
             while not stop.is_set():
-                item = self._next_batch()
+                item = self._next_batch(worker)
                 if item is None:
                     return
                 yield item
@@ -873,7 +1039,10 @@ class Gateway:
                         self.monitor.forget(name)
                         if elastic and (max_workers is None
                                         or spawned < max_workers):
-                            self.stats["respawned"].append(spawn())
+                            fresh = spawn()
+                            self.stats["respawned"].append(fresh)
+                            obs_trace.instant("gw.respawn", cat="supervise",
+                                              worker=fresh, died=name)
                 time.sleep(poll_s)
         finally:
             stop.set()

@@ -266,13 +266,16 @@ class GenotypingService(Gateway):
                         f"site {req.rid}: {kind} length {len(a)} outside "
                         f"[1, {self.max_len}]")
         if not self._admit(req.rid):
+            self._count_submitted(req)
             with self._lock:     # shed: resolve newest with a typed error
                 exc = ShedOverload(
                     f"site {req.rid}: {self._pending} sites pending >= "
                     f"max_pending {self.max_pending}")
                 req.result = error_result(exc)
-                self._record_dead_letter(self._ch.name, req.rid, exc)
+                self._record_dead_letter(self._ch.name, req.rid, exc,
+                                         worker="submit")
             return GenotypeFuture(req, self)
+        self._count_submitted(req)
         req.reads, req.haplotypes = reads, haps
         req._ll = np.full((len(reads), len(haps)), np.nan)   # type: ignore
         req._left = len(reads) * len(haps)                   # type: ignore

@@ -162,14 +162,16 @@ class ReadMappingService(Gateway):
 
     def submit(self, req: MapRequest) -> None:
         if not self._admit(req.rid):
+            self._count_submitted(req)
             with self._lock:     # shed: resolve newest with a typed error
                 self._dead_letter(
                     self._ch, req,
                     ShedOverload(
                         f"request {req.rid}: {self._pending} requests "
                         f"pending >= max_pending {self.max_pending}"),
-                    free_pending=False)
+                    free_pending=False, worker="submit")
             return
+        self._count_submitted(req)
         self._stamp_deadline(req)
         with self._lock:
             self._pending += 1
